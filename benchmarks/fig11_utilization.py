@@ -1,0 +1,58 @@
+"""Paper Fig. 11: FlashAttention FLOPs/s utilization — FSA vs TPUv5e vs
+NeuronCore-v2, seq 2048..16384, head_dim 128.
+
+Two independent reproductions:
+  * the closed-form cycle model (core.systolic_model);
+  * the instruction-level FSA simulator (core.fsa_sim) running the paper's
+    Listing-2 kernel — cross-checks the 5N+10 schedule end to end.
+The paper's headline means: FSA/TPUv5e = 1.77x, FSA/Neuron-v2 = 4.83x.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.fsa_flash import fsa_flash_attention
+from repro.core.systolic_model import (
+    attention_flops,
+    figure11,
+    fsa_utilization,
+)
+
+
+def run(csv_rows: list) -> dict:
+    fig = figure11()
+    for r in fig["rows"]:
+        csv_rows.append(
+            (
+                f"fig11_seq{r['seq_len']}",
+                0.0,
+                f"fsa={r['fsa']:.4f};tpu={r['tpu_v5e']:.4f};neuron={r['neuron_v2']:.4f}",
+            )
+        )
+
+    # Simulator cross-check at a runnable size (seq 1024; the model predicts
+    # utilization is within 1% of the 16k asymptote by then).
+    seq, d = 1024, 128
+    rng = np.random.default_rng(0)
+    q, k, v = (rng.standard_normal((seq, d)).astype(np.float16) for _ in range(3))
+    t0 = time.perf_counter()
+    res = fsa_flash_attention(q, k, v)
+    wall = (time.perf_counter() - t0) * 1e6
+    sim_util = attention_flops(seq, d) / (res.cycles * 2 * 128 * 128)
+    model_util = fsa_utilization(seq, d)
+    csv_rows.append(("fig11_sim_vs_model_seq1024", wall,
+                     f"sim={sim_util:.4f};model={model_util:.4f}"))
+    assert abs(sim_util - model_util) < 1e-9, "simulator != closed-form model"
+
+    csv_rows.append(
+        (
+            "fig11_mean_speedups",
+            0.0,
+            f"vs_tpu={fig['speedup_vs_tpu_v5e']:.3f}(paper 1.77);"
+            f"vs_neuron={fig['speedup_vs_neuron_v2']:.3f}(paper 4.83)",
+        )
+    )
+    return fig

@@ -1,0 +1,52 @@
+"""Paper Fig. 1: component active-time imbalance on NeuronCore-v2 running
+FlashAttention — the paper measures tensor engine ~45% active vs scalar
+unit ~80% active (with <25% FLOPs/s utilization even while active).
+
+Our single-knob model is calibrated to *utilization*, so its "array busy"
+fraction is the utilization-equivalent lower bound (~9%): the measured 45%
+active time additionally includes low-occupancy active cycles (small
+tiles / bank conflicts) that a throughput model cannot distinguish from
+idle.  What the model does reproduce — and what motivates FSA — is the
+*imbalance*: the scalar/vector path is the saturated resource (>=70%
+busy) while the matmul array starves.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.core.systolic_model import ACCELERATORS, matmul_cycles
+
+
+def active_times(which: str, seq_len: int = 8192, head_dim: int = 128) -> dict:
+    m = ACCELERATORS[which]
+    bq, bk = min(m.block_q, seq_len), min(m.block_k, seq_len)
+    mm_flops = 2.0 * bq * bk * head_dim * 2
+    t_mm = mm_flops / m.peak_matmul_flops_per_cycle + matmul_cycles(0, m.array_n)
+    t_vec = (m.vector_ops_per_elem * bq * bk) / m.vector_flops_per_cycle
+    period = max(t_mm, t_vec) + m.swap_overhead_tiles * m.array_n
+    return {
+        "array_active_pct": 100.0 * t_mm / period,
+        "vector_scalar_active_pct": 100.0 * t_vec / period,
+    }
+
+
+def run(csv_rows: list) -> dict:
+    out = {}
+    for which in ("neuron_v2", "tpu_v5e"):
+        a = active_times(which)
+        out[which] = a
+        csv_rows.append(
+            (
+                f"fig1_{which}",
+                0.0,
+                f"array={a['array_active_pct']:.0f}pct;"
+                f"vector_scalar={a['vector_scalar_active_pct']:.0f}pct",
+            )
+        )
+    # Paper Fig. 1 (Neuron-v2): the scalar path saturates while the array
+    # starves (paper: 80% vs 45% active at <25% utilization-while-active).
+    n = out["neuron_v2"]
+    assert n["vector_scalar_active_pct"] >= 70, n
+    assert n["array_active_pct"] < n["vector_scalar_active_pct"] / 2, n
+    return out

@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows and asserts the paper's
+headline numbers (Fig. 11 speedups, Fig. 12 PWL errors, Table 2 accuracy
+envelope, Table 3 area overhead, §3.5 cycle counts).
+
+Roofline terms per (arch x mesh) come from the compiled dry-run
+(launch/dryrun.py + launch/roofline.py), not from here — this harness is
+CPU-runnable paper-claim reproduction.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (
+        fig1_active_time,
+        fig11_utilization,
+        fig12_pwl_error,
+        section35_cycles,
+        table2_accuracy,
+        table3_area,
+    )
+
+    modules = [
+        ("fig1", fig1_active_time),
+        ("fig11", fig11_utilization),
+        ("fig12", fig12_pwl_error),
+        ("table2", table2_accuracy),
+        ("table3", table3_area),
+        ("sec35", section35_cycles),
+    ]
+    csv_rows: list[tuple[str, float, str]] = []
+    failed = []
+    for name, mod in modules:
+        try:
+            mod.run(csv_rows)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+
+    print("name,us_per_call,derived")
+    for row in csv_rows:
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")
+    if failed:
+        print(f"FAILED benchmarks: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Table 3: FSA area breakdown model.
+
+The paper synthesizes RTL at 16 nm/1.5 GHz; we cannot synthesize, so we
+reproduce the *component-count accounting* that produces the 12.07%
+overhead: per-unit areas are derived from the paper's own totals and the
+known replication factors (N^2 PEs, N^2 split units, N^2 upward-path
+registers, N CMP units), then the model re-predicts the overhead for other
+array sizes — the scaling claim implicit in the paper's design argument
+(CMP row cost amortizes as N grows; per-PE costs do not).
+"""
+
+from __future__ import annotations
+
+N = 128
+# Paper Table 3 (um^2).
+PAPER = {
+    "pes": 24_445_044,
+    "other": 313_457,
+    "upward": 1_756_641,
+    "split": 1_493_150,
+    "cmp": 149_524,
+}
+
+
+def area_model(n: int) -> dict:
+    per_pe = PAPER["pes"] / (N * N)
+    per_up = PAPER["upward"] / (N * N)
+    per_split = PAPER["split"] / (N * N)
+    per_cmp = PAPER["cmp"] / N
+    std = per_pe * n * n + PAPER["other"]
+    add = per_up * n * n + per_split * n * n + per_cmp * n
+    return {
+        "standard_um2": std,
+        "fsa_additional_um2": add,
+        "overhead_pct": 100.0 * add / (std + add),
+    }
+
+
+def run(csv_rows: list) -> dict:
+    out = {}
+    for n in (64, 128, 256):
+        m = area_model(n)
+        out[n] = m
+        csv_rows.append(
+            (f"table3_area_n{n}", 0.0, f"overhead={m['overhead_pct']:.2f}pct")
+        )
+    # Check the 128-point reproduces the paper's 12.07%.
+    assert abs(out[128]["overhead_pct"] - 12.07) < 0.1, out[128]
+    return out

@@ -1,0 +1,142 @@
+"""Fault-tolerant checkpointing.
+
+Properties required at 1000+ nodes, implemented here:
+
+  * **atomic**: writes go to ``step_N.tmp/`` then ``os.rename`` to
+    ``step_N/`` — a crash mid-save never corrupts the latest checkpoint;
+  * **async**: ``save_async`` snapshots device arrays to host then writes in
+    a background thread so the train loop keeps stepping;
+  * **sharded**: each host writes only its address-able shards (single-host
+    here, but the layout is per-leaf .npy + a msgpack manifest keyed by
+    pytree path, exactly what a multi-host writer partitions);
+  * **elastic**: ``restore`` takes a target pytree of ShapeDtypeStructs (or
+    shardings) and re-shards on load with ``jax.device_put`` — resuming on
+    a different mesh shape Just Works;
+  * **retention**: keep the newest ``keep`` checkpoints, delete older.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._lock = threading.Lock()
+        self._pending: Optional[threading.Thread] = None
+
+    # -- save -------------------------------------------------------------
+
+    def save(self, step: int, tree: Any) -> str:
+        host_tree = jax.tree.map(np.asarray, tree)  # device -> host snapshot
+        return self._write(step, host_tree)
+
+    def save_async(self, step: int, tree: Any) -> None:
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot BEFORE returning
+        self.wait()
+        self._pending = threading.Thread(
+            target=self._write, args=(step, host_tree), daemon=True
+        )
+        self._pending.start()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _write(self, step: int, host_tree: Any) -> str:
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        tmp = final + ".tmp"
+        with self._lock:
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            flat = _flatten_with_paths(host_tree)
+            manifest = {}
+            for i, (key, leaf) in enumerate(sorted(flat.items())):
+                fname = f"leaf_{i:06d}.npy"
+                np.save(os.path.join(tmp, fname), np.asarray(leaf))
+                manifest[key] = fname
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump({"step": step, "leaves": manifest}, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic publish
+            self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"), ignore_errors=True)
+
+    # -- restore -----------------------------------------------------------
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target: Any, shardings: Any = None) -> Any:
+        """Load into the structure of ``target``; re-shard if requested.
+
+        ``target`` may hold arrays or ShapeDtypeStructs.  ``shardings``
+        (same structure, jax.sharding.Sharding leaves) enables elastic
+        resume onto a different mesh.
+        """
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)["leaves"]
+        flat_target = _flatten_with_paths(target)
+        missing = set(flat_target) - set(manifest)
+        extra = set(manifest) - set(flat_target)
+        if missing or extra:
+            raise ValueError(f"checkpoint mismatch: missing={missing} extra={extra}")
+        loaded = {
+            key: np.load(os.path.join(path, fname)) for key, fname in manifest.items()
+        }
+        flat_shard = _flatten_with_paths(shardings) if shardings is not None else {}
+
+        leaves_keys = sorted(flat_target)
+        values = []
+        for key in leaves_keys:
+            arr = loaded[key]
+            tgt = flat_target[key]
+            if tuple(arr.shape) != tuple(tgt.shape):
+                raise ValueError(f"{key}: shape {arr.shape} != target {tgt.shape}")
+            arr = arr.astype(tgt.dtype)
+            if key in flat_shard:
+                arr = jax.device_put(arr, flat_shard[key])
+            values.append(arr)
+        # Rebuild by path order.
+        paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(target)
+        key_of = [
+            "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path)
+            for path, _ in paths_leaves
+        ]
+        by_key = dict(zip(leaves_keys, values))
+        return jax.tree_util.tree_unflatten(treedef, [by_key[k] for k in key_of])

@@ -1,0 +1,237 @@
+"""Fused FlashAttention forward as a Pallas TPU kernel — the TPU-native
+realization of the paper's SystolicAttention schedule (DESIGN.md §2).
+
+The paper fuses QKᵀ → online softmax → PV inside one systolic array so no
+intermediate ever leaves the array.  On TPU the equivalent is one Pallas
+kernel whose S/P tiles never leave VMEM:
+
+  * grid = (batch·heads, num_q_blocks, num_k_blocks); the KV dimension is
+    innermost, so the fp32 running statistics (m, l) and the output
+    accumulator live in VMEM scratch across KV steps — the analogue of the
+    CMP-row registers and the accumulation SRAM;
+  * Br = Bc = 128 blocks match the paper's §3.5 tiling (= MXU tile);
+  * softmax uses exp2 with the 1/sqrt(d) scale folded into the exp2
+    argument — *exactly* Algorithm 1's operation order (rowmax on unscaled
+    scores), preserving the paper's numerics claims;
+  * optionally the 8-segment PWL exp2 (paper §3.3) computed with the same
+    slope/intercept MAC formulation, on the VPU;
+  * GQA without materializing repeated KV heads (index_map arithmetic).
+
+The backward pass has its own Pallas kernels (kernel_bwd.py): the forward
+optionally emits base-2 log-sum-exp rows, and FlashAttention-2-style dq /
+dkv grids recompute P per VMEM tile from the LSE — S/P are never stored.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.pwl_exp2 import LOG2_E, segment_table
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _exp2_inline(x: jax.Array, exp2_impl: str, num_segments: int) -> jax.Array:
+    """exp2 on a VMEM-resident fp32 tile; 'pwl' follows §3.3 bit-for-bit."""
+    if exp2_impl == "exact":
+        return jnp.exp2(x)
+    slope_t, intercept_t = segment_table(num_segments)
+    x_i = jnp.ceil(x)
+    x_f = x - x_i
+    idx = jnp.clip(
+        jnp.floor((x_f + 1.0) * num_segments).astype(jnp.int32), 0, num_segments - 1
+    )
+    # Unrolled segment select with *scalar* constants (no captured arrays in
+    # the kernel body — mirrors the hardware streaming slope/intercept in).
+    slope = jnp.full_like(x, float(slope_t[0]))
+    intercept = jnp.full_like(x, float(intercept_t[0]))
+    for seg in range(1, num_segments):
+        sel = idx == seg
+        slope = jnp.where(sel, float(slope_t[seg]), slope)
+        intercept = jnp.where(sel, float(intercept_t[seg]), intercept)
+    frac = slope * x_f + intercept  # the PE-MAC step
+    e = jnp.clip(x_i, -150.0, 127.0).astype(jnp.int32)
+    out = jnp.ldexp(frac, e)
+    return jnp.where(x_i < -148, 0.0, out)
+
+
+def _fwd_kernel(
+    q_ref,  # [1, block_q, d]
+    k_ref,  # [1, block_k, d]
+    v_ref,  # [1, block_k, d]
+    o_ref,  # [1, block_q, d]
+    *maybe_lse_and_scratch,  # optional lse_ref [1, block_q], then scratch
+    
+    num_k_blocks: int,
+    block_q: int,
+    block_k: int,
+    causal: bool,
+    sm_scale: float,
+    q_offset: int,
+    exp2_impl: str,
+    num_segments: int,
+    seq_k: int,
+    with_lse: bool,
+):
+    if with_lse:
+        lse_ref, m_scr, l_scr, acc_scr = maybe_lse_and_scratch
+    else:
+        m_scr, l_scr, acc_scr = maybe_lse_and_scratch
+        lse_ref = None
+    j = pl.program_id(2)
+    i = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    c = sm_scale * LOG2_E  # folded scale (Algorithm 1 lines 10/12)
+
+    # Causal: whole KV blocks strictly above the diagonal contribute nothing;
+    # keep the arithmetic but mask (grid steps still run — masked lanes).
+    q = q_ref[0].astype(jnp.float32)  # [bq, d]
+    k = k_ref[0].astype(jnp.float32)  # [bk, d]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [bq, bk] — unscaled S, as in Algorithm 1 line 6
+
+    cols = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    if seq_k % block_k != 0:
+        s = jnp.where(cols < seq_k, s, NEG_INF)
+    if causal:
+        rows = (
+            i * block_q
+            + q_offset
+            + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        )
+        s = jnp.where(rows >= cols, s, NEG_INF)
+
+    old_m = m_scr[...]
+    local_m = jnp.max(s, axis=-1)
+    new_m = jnp.maximum(local_m, old_m)                      # line 8
+    b = _exp2_inline(c * (old_m - new_m), exp2_impl, num_segments)  # line 10
+    p = _exp2_inline(c * (s - new_m[:, None]), exp2_impl, num_segments)  # line 12
+    l_scr[...] = l_scr[...] * b + jnp.sum(p, axis=-1)        # lines 13-14
+    v = v_ref[0].astype(jnp.float32)
+    local_o = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_scr[...] = acc_scr[...] * b[:, None] + local_o       # line 16
+    m_scr[...] = new_m
+
+    @pl.when(j == num_k_blocks - 1)
+    def _finalize():  # line 21: O_i = diag(l)^-1 O
+        l = l_scr[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, :] = (acc_scr[...] / safe_l[:, None]).astype(o_ref.dtype)
+        if with_lse:
+            # Base-2 LSE with the scale folded in: P = exp2(c*S - LSE) is
+            # the *normalized* probability the backward recomputes.
+            lse_ref[0, :] = c * m_scr[...] + jnp.log2(safe_l)
+
+
+def flash_attention_fwd(
+    q: jax.Array,  # [B, Sq, H, d]
+    k: jax.Array,  # [B, Sk, Hkv, d]
+    v: jax.Array,  # [B, Sk, Hkv, d]
+    *,
+    causal: bool = False,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    exp2_impl: str = "exact",
+    num_segments: int = 8,
+    interpret: bool = False,
+    return_lse: bool = False,
+):
+    batch, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    assert h % hkv == 0
+    rep = h // hkv
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(d))
+
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    num_q = -(-sq // block_q)
+    num_k = -(-sk // block_k)
+    pad_q = num_q * block_q - sq
+    pad_k = num_k * block_k - sk
+
+    # [B,S,H,d] -> [B*H, S, d] head-major layout for clean 2D blocks.
+    qh = q.transpose(0, 2, 1, 3).reshape(batch * h, sq, d)
+    kh = k.transpose(0, 2, 1, 3).reshape(batch * hkv, sk, d)
+    vh = v.transpose(0, 2, 1, 3).reshape(batch * hkv, sk, d)
+    if pad_q:
+        qh = jnp.pad(qh, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kh = jnp.pad(kh, ((0, 0), (0, pad_k), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, pad_k), (0, 0)))
+
+    grid = (batch * h, num_q, num_k)
+
+    kernel = functools.partial(
+        _fwd_kernel,
+        with_lse=return_lse,
+        num_k_blocks=num_k,
+        block_q=block_q,
+        block_k=block_k,
+        causal=causal,
+        sm_scale=float(scale),
+        q_offset=q_offset,
+        exp2_impl=exp2_impl,
+        num_segments=num_segments,
+        seq_k=sk,
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, i, j: (bh, i, 0)),
+            # GQA: map q-head bh -> kv-head bh // rep without materializing.
+            pl.BlockSpec((1, block_k, d), lambda bh, i, j, rep=rep: (bh // rep, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, i, j, rep=rep: (bh // rep, j, 0)),
+        ],
+        out_specs=(
+            [
+                pl.BlockSpec((1, block_q, d), lambda bh, i, j: (bh, i, 0)),
+                pl.BlockSpec((1, block_q), lambda bh, i, j: (bh, i)),
+            ]
+            if return_lse
+            else pl.BlockSpec((1, block_q, d), lambda bh, i, j: (bh, i, 0))
+        ),
+        out_shape=(
+            [
+                jax.ShapeDtypeStruct((batch * h, num_q * block_q, d), q.dtype),
+                jax.ShapeDtypeStruct((batch * h, num_q * block_q), jnp.float32),
+            ]
+            if return_lse
+            else jax.ShapeDtypeStruct((batch * h, num_q * block_q, d), q.dtype)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+
+    if return_lse:
+        out, lse = out
+        o = out[:, :sq, :].reshape(batch, h, sq, d).transpose(0, 2, 1, 3)
+        return o, lse
+    out = out[:, :sq, :].reshape(batch, h, sq, d).transpose(0, 2, 1, 3)
+    return out

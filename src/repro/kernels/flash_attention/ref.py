@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the flash-attention Pallas kernels.
+
+The contract for every kernel in this package: ``ops.flash_attention(...)``
+must match ``ref.attention_reference(...)`` to fp32 tolerance (or to the
+paper's Table-2 error envelope when ``exp2_impl='pwl'``).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_reference(
+    q: jax.Array,  # [B, Sq, H, d]
+    k: jax.Array,  # [B, Sk, Hkv, d]
+    v: jax.Array,  # [B, Sk, Hkv, d]
+    *,
+    causal: bool = False,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Materialized-softmax attention in fp32; GQA by kv-head repetition."""
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(d))
+    kr = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+    vr = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32))
+    s = s * scale
+    if causal:
+        rows = q_offset + jnp.arange(sq)[:, None]
+        cols = jnp.arange(k.shape[1])[None, :]
+        s = jnp.where(rows >= cols, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return o.astype(q.dtype)

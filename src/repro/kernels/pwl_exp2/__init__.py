@@ -1,0 +1,2 @@
+from .kernel import pwl_exp2_pallas  # noqa: F401
+from .ref import pwl_exp2_reference  # noqa: F401

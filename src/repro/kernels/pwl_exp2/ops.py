@@ -1,0 +1,9 @@
+"""Jitted wrapper for the PWL exp2 kernel."""
+import functools
+import jax
+from .kernel import pwl_exp2_pallas
+
+pwl_exp2 = jax.jit(
+    functools.partial(pwl_exp2_pallas, interpret=False),
+    static_argnames=("num_segments", "block_rows"),
+)

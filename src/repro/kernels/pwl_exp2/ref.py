@@ -1,0 +1,2 @@
+"""jnp oracle for the PWL exp2 Pallas kernel: repro.core.pwl_exp2.pwl_exp2."""
+from repro.core.pwl_exp2 import pwl_exp2 as pwl_exp2_reference  # noqa: F401

@@ -1,0 +1,166 @@
+"""Dry-run cell machinery: abstract inputs + lower/compile one
+(architecture x input-shape x mesh) combination.
+
+Everything here works on ShapeDtypeStructs — no parameter or cache is ever
+allocated; ``lower_cell(...).compile()`` is the proof that the sharding
+config is coherent for the production mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.configs.registry import get_config
+from repro.dist.sharding import (
+    batch_pspec,
+    cache_shardings,
+    param_shardings,
+    zero1_shardings,
+)
+from repro.models.model import init_cache, param_shapes
+from repro.optim.adamw import make_optimizer
+from repro.serve.serve_step import make_decode_step, make_prefill_step
+from repro.train.train_step import make_train_step
+
+# Archs whose optimizer state must be Adafactor + ZeRO-1 to fit HBM
+# (see EXPERIMENTS.md memory table).
+ADAFACTOR_ARCHS = {"arctic-480b", "qwen3-moe-235b-a22b"}
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    gb, s = shape.global_batch, shape.seq_len
+    act = cfg.activation_dtype
+    if shape.kind in ("train", "prefill"):
+        batch: dict[str, Any] = {}
+        if cfg.embedding_inputs:
+            batch["embeds"] = sds((gb, s, cfg.d_model), act)
+        else:
+            batch["tokens"] = sds((gb, s), jnp.int32)
+        if cfg.mrope_sections is not None:
+            batch["positions"] = sds((gb, s, 3), jnp.int32)
+        if shape.kind == "train":
+            batch["labels"] = sds((gb, s), jnp.int32)
+        return {"batch": batch}
+    # decode: one new token against a cache of length seq_len
+    cache = jax.eval_shape(lambda: init_cache(cfg, gb, s))
+    return {
+        "tokens": sds((gb, 1), jnp.int32),
+        "position": sds((), jnp.int32),
+        "cache": cache,
+    }
+
+
+@dataclasses.dataclass
+class LoweredCell:
+    arch: str
+    shape_name: str
+    kind: str
+    mesh_desc: str
+    lowered: Any
+    meta: dict
+
+
+def _replicated(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def dryrun_config(cfg: ModelConfig, shape: ShapeConfig, scan_unroll: int = 1) -> ModelConfig:
+    """Dry-run cost-accounting overrides (see launch/dryrun.py):
+
+    * fully unroll the attention KV scans so their FLOPs are counted
+      (XLA's cost_analysis counts while bodies once), with larger blocks
+      so the unrolled HLO stays small;
+    * set the layer-scan unroll for the two-point cost extrapolation.
+    """
+    # Respect explicitly-tuned blocks (hillclimb); default to seq/8 so the
+    # unrolled HLO stays small.
+    block = max(128, shape.seq_len // 8)
+    bq = cfg.attn_block_q if cfg.attn_block_q != 128 else block
+    bk = cfg.attn_block_k if cfg.attn_block_k != 128 else block
+    return dataclasses.replace(
+        cfg,
+        scan_unroll=scan_unroll,
+        attn_unroll=True,
+        attn_block_q=bq,
+        attn_block_k=bk,
+    )
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    mesh,
+    *,
+    cfg_override: Optional[ModelConfig] = None,
+    scan_unroll: int = 0,  # 0 = plain production config (no dry-run overrides)
+    num_microbatches: int = 1,
+    donate: bool = True,
+) -> LoweredCell:
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    if scan_unroll:
+        cfg = dryrun_config(cfg, shape, scan_unroll)
+    pshapes = param_shapes(cfg)
+    pshard = param_shardings(pshapes, cfg, mesh)
+    specs = input_specs(cfg, shape)
+    mesh_desc = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            opt_name = "adafactor" if arch in ADAFACTOR_ARCHS else "adamw"
+            optimizer = make_optimizer(opt_name, lr=3e-4)
+            oshapes = jax.eval_shape(optimizer.init, pshapes)
+            oshard = zero1_shardings(oshapes, cfg, mesh)
+            bshard = batch_pspec(specs["batch"], mesh, cfg)
+            step = make_train_step(cfg, optimizer, num_microbatches=num_microbatches)
+            jitted = jax.jit(
+                step,
+                in_shardings=(pshard, oshard, bshard),
+                out_shardings=(pshard, oshard, _replicated(mesh, {"loss": 0, "grad_norm": 0})),
+                donate_argnums=(0, 1) if donate else (),
+            )
+            lowered = jitted.lower(pshapes, oshapes, specs["batch"])
+            meta = {"optimizer": opt_name}
+        elif shape.kind == "prefill":
+            bshard = batch_pspec(specs["batch"], mesh, cfg)
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(pshard, bshard))
+            lowered = jitted.lower(pshapes, specs["batch"])
+            meta = {}
+        else:  # decode
+            cshard = cache_shardings(specs["cache"], cfg, mesh)
+            tshard = batch_pspec({"tokens": specs["tokens"]}, mesh)["tokens"]
+            posshard = NamedSharding(mesh, P())
+            step = make_decode_step(cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(pshard, cshard, tshard, posshard),
+                out_shardings=(tshard, None, cshard),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = jitted.lower(
+                pshapes, specs["cache"], specs["tokens"], specs["position"]
+            )
+            meta = {}
+
+    meta.update(
+        {
+            "params": int(cfg.param_count()),
+            "active_params": int(cfg.active_param_count()),
+            "global_batch": shape.global_batch,
+            "seq_len": shape.seq_len,
+        }
+    )
+    return LoweredCell(arch, shape_name, shape.kind, mesh_desc, lowered, meta)

@@ -1,0 +1,190 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production mesh and print memory/cost/roofline analysis.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init), which is why they precede the module docstring.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes --json out.json
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs.registry import get_config, runnable_cells, skipped_cells  # noqa: E402
+from repro.launch.cells import lower_cell  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import analyze_compiled, model_flops  # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    cfg = get_config(arch)
+    steps = cfg.num_scan_steps
+
+    # XLA's cost_analysis counts while-loop bodies once, so compile twice —
+    # layer-scan unroll=1 and unroll=2 — and extrapolate the exact totals:
+    #   F(u) counts c(u) = u + steps%u layer bodies  ->  f = ΔF/Δc,
+    #   corrected = F1 + (steps - c(1)) * f.
+    t0 = time.time()
+    cell = lower_cell(arch, shape_name, mesh, scan_unroll=1)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = cell.lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    terms = analyze_compiled(compiled, chips)
+    # The multi-pod pass proves the 'pod' axis shards (one compile); exact
+    # cost extrapolation is needed only for the single-pod roofline table.
+    if steps > 1 and not multi_pod:
+        cell2 = lower_cell(arch, shape_name, mesh, scan_unroll=2)
+        t0 = time.time()
+        compiled2 = cell2.lowered.compile()
+        t_compile += time.time() - t0
+        terms2 = analyze_compiled(compiled2, chips)
+        c1, c2 = 1, 2 + steps % 2
+        scale = (steps - c1) / (c2 - c1)
+        terms.flops = terms.flops + scale * (terms2.flops - terms.flops)
+        terms.bytes_accessed = terms.bytes_accessed + scale * (
+            terms2.bytes_accessed - terms.bytes_accessed
+        )
+        terms.coll_bytes = terms.coll_bytes + scale * (
+            terms2.coll_bytes - terms.coll_bytes
+        )
+    tokens = cell.meta["global_batch"] * (
+        cell.meta["seq_len"] if cell.kind in ("train", "prefill") else 1
+    )
+    mf = model_flops(cell.meta["active_params"], tokens, cell.kind)
+    flops_source = "hlo_extrapolated"
+    if cfg.family == "ssm" and mf > terms.flops:
+        # xLSTM's per-token recurrence is a nested time scan whose body XLA
+        # also counts once; no finite unroll fixes 4096+ steps, so fall back
+        # to the analytic 6·N·D (2·N·D decode) model FLOPs for this family.
+        terms.flops = mf
+        flops_source = "model_flops (xLSTM time-scan bodies counted once)"
+    bytes_per_device = (
+        mem.argument_size_in_bytes + mem.output_size_in_bytes + mem.temp_size_in_bytes
+        - mem.alias_size_in_bytes
+    )
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": cell.kind,
+        "mesh": cell.mesh_desc,
+        "chips": chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "bytes_per_device": int(bytes_per_device),
+        "gb_per_device": round(bytes_per_device / 2**30, 3),
+        "hlo_flops": terms.flops,
+        "hlo_bytes": terms.bytes_accessed,
+        "collective_bytes": terms.coll_bytes,
+        "collective_breakdown": terms.coll_breakdown,
+        "t_compute_s": terms.t_compute,
+        "t_memory_s": terms.t_memory,
+        "t_collective_s": terms.t_collective,
+        "bottleneck": terms.bottleneck,
+        "flops_source": flops_source,
+        "model_flops": mf,
+        "useful_flops_ratio": mf / terms.flops if terms.flops else 0.0,
+        "roofline_fraction": terms.roofline_fraction(),
+        **cell.meta,
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} on {cell.mesh_desc} ({chips} chips) ==")
+        print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"  memory_analysis: {mem}")
+        print(
+            f"  per-device bytes: {rec['gb_per_device']} GiB  "
+            f"(v5e HBM 16 GiB: {'FITS' if bytes_per_device < 16*2**30 else 'OVER'})"
+        )
+        print(
+            f"  roofline terms: compute {terms.t_compute*1e3:.2f} ms | "
+            f"memory {terms.t_memory*1e3:.2f} ms | "
+            f"collective {terms.t_collective*1e3:.2f} ms -> {terms.bottleneck}-bound"
+        )
+        print(
+            f"  MODEL_FLOPS/HLO_FLOPS = {rec['useful_flops_ratio']:.3f}  "
+            f"roofline fraction = {rec['roofline_fraction']:.3f}"
+        )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--start", type=int, default=0, help="skip first N cells")
+    ap.add_argument("--limit", type=int, default=0)
+    args = ap.parse_args()
+
+    assert jax.device_count() == 512, (
+        f"dry-run needs 512 placeholder devices, got {jax.device_count()}"
+    )
+
+    if args.all:
+        cells = runnable_cells()[args.start:]
+        if args.limit:
+            cells = cells[: args.limit]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    records = []
+
+    def dump():
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(records, f, indent=1, default=str)
+
+    for multi_pod in meshes:
+        for arch, shape_name in cells:
+            try:
+                records.append(run_cell(arch, shape_name, multi_pod))
+            except Exception as e:  # a failure here is a sharding bug
+                traceback.print_exc()
+                records.append(
+                    {
+                        "arch": arch,
+                        "shape": shape_name,
+                        "mesh": "2x16x16" if multi_pod else "16x16",
+                        "status": f"FAIL: {type(e).__name__}: {str(e)[:300]}",
+                    }
+                )
+            dump()  # incremental: survive interruption
+    for arch, shape_name, reason in skipped_cells():
+        records.append(
+            {"arch": arch, "shape": shape_name, "status": f"skipped: {reason}"}
+        )
+
+    n_ok = sum(1 for r in records if r.get("status") == "ok")
+    n_fail = sum(1 for r in records if str(r.get("status", "")).startswith("FAIL"))
+    print(f"\n=== dry-run summary: {n_ok} ok, {n_fail} FAILED, "
+          f"{len(records) - n_ok - n_fail} skipped ===")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1, default=str)
+        print(f"wrote {args.json}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

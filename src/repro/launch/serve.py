@@ -1,0 +1,49 @@
+"""Serving launcher: batched requests against a (smoke-config) model.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --requests 8
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_smoke_config
+from repro.models import init_params
+from repro.serve.engine import Request, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    if cfg.family == "encoder":
+        raise SystemExit("encoder-only arch: no decode phase (DESIGN.md §5)")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, batch_size=args.batch, max_len=128)
+
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        engine.submit(
+            Request(
+                rid=i,
+                prompt=rng.integers(0, cfg.vocab_size, size=args.prompt_len).astype(np.int32),
+                max_new_tokens=args.max_new,
+            )
+        )
+    done = engine.run()
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"req {r.rid}: -> {r.output}")
+    print(f"completed {len(done)}/{args.requests}")
+
+
+if __name__ == "__main__":
+    main()

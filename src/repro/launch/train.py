@@ -1,0 +1,57 @@
+"""Production training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --steps 50 \
+      --batch 8 --seq 256 [--smoke] [--ckpt-dir DIR] [--resume]
+
+``--smoke`` uses the arch's reduced config (CPU-runnable); the full config
+is what the multi-pod dry-run lowers.  On a real TPU slice this same entry
+point runs under the production mesh (--mesh pod|multipod) with the
+sharding rules from repro.dist.sharding.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import get_config, get_smoke_config
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--optimizer", default="adamw", choices=("adamw", "adafactor"))
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--token-file", default=None)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.family == "encoder" and not cfg.embedding_inputs:
+        raise SystemExit("encoder archs train on frame embeddings")
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    tcfg = TrainerConfig(
+        total_steps=args.steps,
+        ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir,
+        optimizer=args.optimizer,
+        peak_lr=args.lr,
+        num_microbatches=args.microbatches,
+        log_every=max(args.steps // 10, 1),
+    )
+    trainer = Trainer(cfg, shape, tcfg, token_file=args.token_file)
+    state = trainer.run()
+    print(f"done at step {state['step']}; "
+          f"loss {state['losses'][0]:.4f} -> {state['losses'][-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

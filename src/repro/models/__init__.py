@@ -1,0 +1,1 @@
+from .model import decode_step, forward, init_cache, init_params, lm_loss, param_shapes  # noqa: F401

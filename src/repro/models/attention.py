@@ -1,0 +1,144 @@
+"""GQA attention layer: params, forward (train/prefill), decode with KV cache.
+
+The paper's technique enters here: ``cfg.attention_impl`` selects
+
+  * ``systolic`` — the Algorithm-1-faithful tiled jnp implementation
+    (``repro.core.attention``), lowers on all backends; the dry-run path;
+  * ``pallas``   — the fused Pallas TPU kernel (``repro.kernels``);
+  * ``naive``    — materialized softmax (oracle / tiny decode steps).
+
+Per the paper §8.3, decode (seq_q == 1, memory-bound) never uses the FSA
+path: a 1-token query would waste a 128x128 tile.  ``decode_attention``
+is a plain einsum over the KV cache.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.attention import naive_attention, systolic_attention
+from repro.kernels.flash_attention.ops import flash_attention
+from .layers import apply_mrope, apply_rope, dense_init, rms_norm
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, max_len, Hkv, d]
+    v: jax.Array  # [B, max_len, Hkv, d]
+    length: jax.Array  # scalar int32: tokens already cached
+
+
+def attention_params(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    keys = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(keys[0], d, cfg.num_heads * hd, dtype),
+        "wk": dense_init(keys[1], d, cfg.num_kv_heads * hd, dtype),
+        "wv": dense_init(keys[2], d, cfg.num_kv_heads * hd, dtype),
+        "wo": dense_init(keys[3], cfg.num_heads * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+    if cfg.qk_norm:  # qwen3-style per-head q/k RMSNorm
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(x, params, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, cfg.num_heads, hd)
+    k = k.reshape(b, s, cfg.num_kv_heads, hd)
+    v = v.reshape(b, s, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_forward(
+    x: jax.Array,  # [B, S, d_model]
+    params: dict,
+    cfg: ModelConfig,
+    positions: jax.Array,  # [B, S] (or [B, S, 3] for M-RoPE)
+) -> jax.Array:
+    """Full-sequence attention (training / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(x, params, cfg, positions)
+    if cfg.attention_impl == "naive":
+        o = naive_attention(q, k, v, causal=cfg.causal)
+    elif cfg.attention_impl == "pallas":
+        o = flash_attention(
+            q, k, v, cfg.causal, None, 0,
+            cfg.attn_block_q, cfg.attn_block_k, cfg.exp2_impl, 8, "pallas",
+        )
+    else:  # systolic (paper-faithful jnp; dry-run / CPU path)
+        o = systolic_attention(
+            q, k, v,
+            causal=cfg.causal,
+            block_q=cfg.attn_block_q,
+            block_k=cfg.attn_block_k,
+            exp2_impl=cfg.exp2_impl,
+            unroll=cfg.attn_unroll,
+        )
+    o = o.reshape(b, s, cfg.num_heads * cfg.resolved_head_dim)
+    return o @ params["wo"]
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
+    hd = cfg.resolved_head_dim
+    return KVCache(
+        k=jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+        v=jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def decode_attention(
+    x: jax.Array,  # [B, 1, d_model]
+    params: dict,
+    cfg: ModelConfig,
+    cache: KVCache,
+    positions: jax.Array,  # [B, 1] (or [B, 1, 3])
+) -> tuple[jax.Array, KVCache]:
+    """Single-token decode against the KV cache (paper §8.3: never FSA)."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k_new, v_new = _project_qkv(x, params, cfg, positions)
+
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), cache.length, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), cache.length, axis=1)
+    new_cache = KVCache(k=k, v=v, length=cache.length + 1)
+
+    # GQA via grouped einsum — materializing jnp.repeat(k, rep) would blow
+    # the cache up rep x (16x for qwen3) and force GSPMD to reshard it every
+    # step (measured: the dominant decode collective cost).
+    rep = cfg.num_heads // cfg.num_kv_heads
+    qg = q.reshape(b, 1, cfg.num_kv_heads, rep, hd).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k.astype(jnp.float32)) * scale
+    # Mask positions beyond the (updated) cache length.
+    valid = jnp.arange(k.shape[1])[None, None, None, None, :] <= cache.length
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhrqk,bkhd->bqhrd", p, v.astype(jnp.float32)).astype(x.dtype)
+    o = o.reshape(b, 1, cfg.num_heads * hd)
+    return o @ params["wo"], new_cache

@@ -1,0 +1,392 @@
+"""Model assembly: init / forward / decode for every architecture family.
+
+Families:
+  dense | moe | vlm | encoder — transformer stacks (scan-over-layers, remat)
+  hybrid — zamba2: Mamba2 backbone + one *shared* attention(+MLP) block
+           applied every ``cfg.attn_every`` layers (weights shared, KV caches
+           per application)
+  ssm    — xlstm: alternating mLSTM / sLSTM blocks (attention-free)
+
+All params are plain nested dicts; layer params are stacked along a leading
+axis and consumed by ``jax.lax.scan`` so the per-layer HLO is compiled once
+(critical for 94-layer dry-run compiles).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.collectives import constrain
+from .attention import (
+    KVCache,
+    attention_forward,
+    attention_params,
+    decode_attention,
+    init_kv_cache,
+)
+from .layers import apply_norm, embed_init, mlp_forward, mlp_params, norm_params
+from .moe import moe_forward, moe_params
+from .ssm import MambaCache, init_mamba_cache, mamba_decode, mamba_forward, mamba_params
+from .xlstm import (
+    MLSTMState,
+    SLSTMState,
+    init_mlstm_state,
+    init_slstm_state,
+    mlstm_decode,
+    mlstm_forward,
+    mlstm_params,
+    slstm_decode,
+    slstm_forward,
+    slstm_params,
+)
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _transformer_layer_params(key, cfg: ModelConfig, dtype) -> dict:
+    keys = jax.random.split(key, 5)
+    p = {
+        "attn_norm": norm_params(keys[0], cfg.d_model, cfg.norm_type, dtype),
+        "attn": attention_params(keys[1], cfg, dtype),
+        "mlp_norm": norm_params(keys[2], cfg.d_model, cfg.norm_type, dtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_params(keys[3], cfg, dtype)
+        if cfg.moe.dense_residual:
+            p["dense_mlp"] = mlp_params(keys[4], cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype)
+    else:
+        p["mlp"] = mlp_params(keys[3], cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    dtype = cfg.activation_dtype
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {}
+    params["embed"] = embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype)
+    params["final_norm"] = norm_params(keys[1], cfg.d_model, cfg.norm_type, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(keys[2], cfg.vocab_size, cfg.d_model, dtype).T
+
+    if cfg.family in ("dense", "moe", "vlm", "encoder"):
+        layer_keys = jax.random.split(keys[3], cfg.num_layers)
+        params["layers"] = jax.vmap(
+            lambda k: _transformer_layer_params(k, cfg, dtype)
+        )(layer_keys)
+    elif cfg.family == "hybrid":
+        layer_keys = jax.random.split(keys[3], cfg.num_layers)
+        params["mamba_layers"] = jax.vmap(
+            lambda k: {
+                "norm": norm_params(None, cfg.d_model, cfg.norm_type, dtype),
+                "mamba": mamba_params(k, cfg, dtype),
+            }
+        )(layer_keys)
+        params["shared_attn"] = _transformer_layer_params(keys[4], cfg, dtype)
+    elif cfg.family == "ssm":
+        n_blocks = cfg.num_layers // 2  # one (mLSTM, sLSTM) pair per block
+        block_keys = jax.random.split(keys[3], n_blocks)
+        params["blocks"] = jax.vmap(
+            lambda k: {
+                "mlstm_norm": norm_params(None, cfg.d_model, cfg.norm_type, dtype),
+                "mlstm": mlstm_params(jax.random.fold_in(k, 0), cfg, dtype),
+                "slstm_norm": norm_params(None, cfg.d_model, cfg.norm_type, dtype),
+                "slstm": slstm_params(jax.random.fold_in(k, 1), cfg, dtype),
+            }
+        )(block_keys)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    """Abstract params (ShapeDtypeStructs) — no allocation; dry-run input."""
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _default_positions(cfg: ModelConfig, batch: int, seq: int, offset=0):
+    pos = offset + jnp.arange(seq, dtype=jnp.int32)[None, :]
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[..., None], (batch, seq, 3))
+    return pos
+
+
+def _sp(x, cfg: ModelConfig):
+    """Sequence-parallel residual sharding (Megatron-SP): the layer-scan
+    carry — which remat checkpoints per layer — lives sharded over
+    (data x model) instead of (data x replicated).  GSPMD inserts the
+    all-gather before attention/MLP and the reduce-scatter after, halving
+    TP collective volume and dividing checkpointed activation memory by
+    the model-axis size.  No-op without an ambient mesh.
+
+    Under dp_only the batch dim spans every axis and the carry is simply
+    batch-sharded."""
+    if cfg.parallelism == "dp_only":
+        return constrain(x, ("pod", "data", "model"), None, None)
+    return constrain(x, ("pod", "data"), "model", None)
+
+
+def _transformer_block(x, layer, cfg: ModelConfig, positions):
+    x = _sp(x, cfg)
+    h = apply_norm(x, layer["attn_norm"], cfg.norm_type)
+    x = x + attention_forward(h, layer["attn"], cfg, positions)
+    x = _sp(x, cfg)
+    h = apply_norm(x, layer["mlp_norm"], cfg.norm_type)
+    if cfg.moe is not None:
+        y = moe_forward(h, layer["moe"], cfg)
+        if cfg.moe.dense_residual:
+            y = y + mlp_forward(h, layer["dense_mlp"], cfg.mlp_type)
+    else:
+        y = mlp_forward(h, layer["mlp"], cfg.mlp_type)
+    return _sp(x + y, cfg)
+
+
+def _scan_layers(x, stacked, body, remat: bool, unroll: int = 1):
+    fn = jax.checkpoint(body) if remat else body
+
+    def step(carry, layer):
+        return fn(carry, layer), None
+
+    out, _ = jax.lax.scan(step, x, stacked, unroll=unroll)
+    return out
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    *,
+    tokens: Optional[jax.Array] = None,  # [B, S] int32
+    embeds: Optional[jax.Array] = None,  # [B, S, d] (frontend-stub archs)
+    positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full-sequence forward -> logits [B, S, V]."""
+    if embeds is not None:
+        x = embeds.astype(cfg.activation_dtype)
+    else:
+        x = params["embed"][tokens]
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = _default_positions(cfg, b, s)
+
+    if cfg.family in ("dense", "moe", "vlm", "encoder"):
+        body = lambda h, layer: _transformer_block(h, layer, cfg, positions)  # noqa: E731
+        x = _scan_layers(x, params["layers"], body, cfg.remat, cfg.scan_unroll)
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+        every = max(cfg.attn_every, 1)
+
+        def hybrid_body(carry, inp):
+            h, = carry
+            layer, idx = inp
+
+            def with_attn(h):
+                return _transformer_block(h, shared, cfg, positions)
+
+            h = jax.lax.cond(idx % every == 0, with_attn, lambda h: h, h)
+            hn = apply_norm(h, layer["norm"], cfg.norm_type)
+            h = h + mamba_forward(hn, layer["mamba"], cfg)
+            return (h,), None
+
+        body_fn = jax.checkpoint(hybrid_body) if cfg.remat else hybrid_body
+        (x,), _ = jax.lax.scan(
+            body_fn,
+            (x,),
+            (params["mamba_layers"], jnp.arange(cfg.num_layers)),
+            unroll=cfg.scan_unroll,
+        )
+    elif cfg.family == "ssm":
+        def ssm_body(h, block):
+            hn = apply_norm(h, block["mlstm_norm"], cfg.norm_type)
+            h = h + mlstm_forward(hn, block["mlstm"], cfg)
+            hn = apply_norm(h, block["slstm_norm"], cfg.norm_type)
+            h = h + slstm_forward(hn, block["slstm"], cfg)
+            return h
+
+        x = _scan_layers(x, params["blocks"], ssm_body, cfg.remat, cfg.scan_unroll)
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(x, params["final_norm"], cfg.norm_type)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# decode (single new token against caches)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    dtype = cfg.activation_dtype
+    if cfg.family in ("dense", "moe", "vlm"):
+        def one(_):
+            return init_kv_cache(cfg, batch, max_len, dtype)
+
+        return jax.vmap(one)(jnp.arange(cfg.num_layers))
+    if cfg.family == "hybrid":
+        every = max(cfg.attn_every, 1)
+        n_attn = (cfg.num_layers + every - 1) // every
+        return {
+            "attn": jax.vmap(lambda _: init_kv_cache(cfg, batch, max_len, dtype))(
+                jnp.arange(n_attn)
+            ),
+            "mamba": jax.vmap(lambda _: init_mamba_cache(cfg, batch, dtype))(
+                jnp.arange(cfg.num_layers)
+            ),
+        }
+    if cfg.family == "ssm":
+        n_blocks = cfg.num_layers // 2
+        return {
+            "mlstm": jax.vmap(lambda _: init_mlstm_state(cfg, batch))(
+                jnp.arange(n_blocks)
+            ),
+            "slstm": jax.vmap(lambda _: init_slstm_state(cfg, batch))(
+                jnp.arange(n_blocks)
+            ),
+        }
+    raise ValueError(f"{cfg.family} has no decode step (encoder-only)")
+
+
+def decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # [B, 1] int32
+    cache: Any,
+    position: jax.Array,  # scalar int32: absolute position of the new token
+) -> tuple[jax.Array, Any]:
+    """One decode step -> (logits [B, 1, V], new cache)."""
+    x = params["embed"][tokens]
+    b = x.shape[0]
+    pos = jnp.broadcast_to(position.reshape(1, 1), (b, 1)).astype(jnp.int32)
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[..., None], (b, 1, 3))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(h, inp):
+            layer, kv = inp
+            hn = apply_norm(h, layer["attn_norm"], cfg.norm_type)
+            a, kv_new = decode_attention(hn, layer["attn"], cfg, kv, pos)
+            h = h + a
+            hn = apply_norm(h, layer["mlp_norm"], cfg.norm_type)
+            if cfg.moe is not None:
+                y = moe_forward(hn, layer["moe"], cfg)
+                if cfg.moe.dense_residual:
+                    y = y + mlp_forward(hn, layer["dense_mlp"], cfg.mlp_type)
+            else:
+                y = mlp_forward(hn, layer["mlp"], cfg.mlp_type)
+            return h + y, kv_new
+
+        x, new_cache = jax.lax.scan(
+            body, x, (params["layers"], cache), unroll=cfg.scan_unroll
+        )
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+        every = max(cfg.attn_every, 1)
+        n_attn = (cfg.num_layers + every - 1) // every
+
+        def hybrid_body(carry, inp):
+            h = carry
+            layer, mamba_cache, idx = inp
+
+            def with_attn(args):
+                h, kv = args
+                hn = apply_norm(h, shared["attn_norm"], cfg.norm_type)
+                a, kv_new = decode_attention(hn, shared["attn"], cfg, kv, pos)
+                h = h + a
+                hn = apply_norm(h, shared["mlp_norm"], cfg.norm_type)
+                h = h + mlp_forward(hn, shared["mlp"], cfg.mlp_type)
+                return h, kv_new
+
+            attn_slot = idx // every
+            kv = jax.tree.map(lambda c: c[attn_slot], cache["attn"])
+            h, kv_new = jax.lax.cond(
+                idx % every == 0, with_attn, lambda a: (a[0], a[1]), (h, kv)
+            )
+            hn = apply_norm(h, layer["norm"], cfg.norm_type)
+            m, mc_new = mamba_decode(hn, layer["mamba"], cfg, mamba_cache)
+            # Non-attention layers must not write their (stale) slot echo:
+            # route their scatter index out of bounds (dropped below).
+            write_idx = jnp.where(idx % every == 0, attn_slot, n_attn)
+            return h + m, (kv_new, write_idx, mc_new)
+
+        x, (kvs, slots, mcs) = jax.lax.scan(
+            hybrid_body,
+            x,
+            (params["mamba_layers"], cache["mamba"], jnp.arange(cfg.num_layers)),
+            unroll=cfg.scan_unroll,
+        )
+        # Scatter updated attention caches back: exactly one layer per slot
+        # carries a valid index; all others were routed out of bounds and
+        # are dropped by the scatter.
+        new_attn = jax.tree.map(
+            lambda stacked, upd: stacked.at[slots].set(upd, mode="drop"),
+            cache["attn"],
+            kvs,
+        )
+        new_cache = {"attn": new_attn, "mamba": mcs}
+    elif cfg.family == "ssm":
+        def ssm_body(h, inp):
+            block, ms, ss = inp
+            hn = apply_norm(h, block["mlstm_norm"], cfg.norm_type)
+            y, ms_new = mlstm_decode(hn, block["mlstm"], cfg, ms)
+            h = h + y
+            hn = apply_norm(h, block["slstm_norm"], cfg.norm_type)
+            y, ss_new = slstm_decode(hn, block["slstm"], cfg, ss)
+            return h + y, (ms_new, ss_new)
+
+        x, (ms_all, ss_all) = jax.lax.scan(
+            ssm_body,
+            x,
+            (params["blocks"], cache["mlstm"], cache["slstm"]),
+            unroll=cfg.scan_unroll,
+        )
+        new_cache = {"mlstm": ms_all, "slstm": ss_all}
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(x, params["final_norm"], cfg.norm_type)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(
+    params: dict,
+    cfg: ModelConfig,
+    batch: dict,
+) -> jax.Array:
+    """Next-token (or frame-label) cross entropy; labels < 0 are masked."""
+    logits = forward(
+        params,
+        cfg,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        positions=batch.get("positions"),
+    )
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

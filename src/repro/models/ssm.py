@@ -1,0 +1,209 @@
+"""Mamba2 (SSD) block — chunked state-space dual algorithm in pure JAX.
+
+Used by the zamba2 hybrid architecture.  Implements:
+
+  * input projection -> (z, x, B, C, dt), causal depthwise conv on (x, B, C),
+  * scalar-identity state transition per head: h_t = a_t h_{t-1} + dt_t x_t B_t^T,
+    y_t = C_t h_t + D x_t, with a_t = exp(-softplus(A_log) * dt_t),
+  * chunked evaluation (intra-chunk quadratic attention-like term + inter-chunk
+    recurrent state carry), O(S * chunk) instead of O(S^2),
+  * gated output (silu(z)) + RMSNorm, out projection,
+  * single-token recurrent decode with (conv_state, ssm_state) cache.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import dense_init, rms_norm
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array  # [B, conv_width - 1, conv_channels]
+    ssm: jax.Array  # [B, H, head_dim, state_dim]
+
+
+def _dims(cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    nheads = d_inner // ssm.head_dim
+    conv_ch = d_inner + 2 * ssm.state_dim
+    return d_inner, nheads, conv_ch
+
+
+def mamba_params(key, cfg: ModelConfig, dtype) -> dict:
+    ssm = cfg.ssm
+    d = cfg.d_model
+    d_inner, nheads, conv_ch = _dims(cfg)
+    keys = jax.random.split(key, 4)
+    in_dim = 2 * d_inner + 2 * ssm.state_dim + nheads  # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(keys[0], d, in_dim, dtype),
+        "conv_w": (jax.random.normal(keys[1], (ssm.conv_width, conv_ch), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((nheads,), jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(keys[2], d_inner, d, dtype),
+    }
+
+
+def _split_proj(proj: jax.Array, cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_inner, nheads, _ = _dims(cfg)
+    z, xbc, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * ssm.state_dim], axis=-1)
+    return z, xbc, dt  # xbc = concat(x, B, C)
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. xbc: [B, S, C], w: [K, C]."""
+    kw = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (kw - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(kw)
+    )
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(
+    x: jax.Array,   # [B, S, H, P]   (P = head_dim)
+    dt: jax.Array,  # [B, S, H]      (post-softplus)
+    a: jax.Array,   # [B, S, H]      log-decay per step: -softplus(A_log)*dt
+    B: jax.Array,   # [B, S, N]
+    C: jax.Array,   # [B, S, N]
+    chunk: int,
+    h0: jax.Array | None = None,  # [B, H, P, N]
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y [B,S,H,P], h_final [B,H,P,N])."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    ac = a.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    # Cumulative log-decay within each chunk.
+    cum = jnp.cumsum(ac, axis=2)  # [B, NC, L, H]
+    total = cum[:, :, -1]  # [B, NC, H]
+
+    # Intra-chunk (quadratic within the chunk):
+    # y_intra[t] = sum_{u<=t} exp(cum[t]-cum[u]) * (C_t . B_u) * dt_u * x_u
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # [B,NC,L,L,H]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(mask[None, None, :, :, None], decay, 0.0)
+    scores = jnp.einsum("bctn,bcun->bctu", Cc, Bc)  # [B,NC,L,L]
+    w = scores[..., None] * decay * dtc[:, :, None, :, :]  # [B,NC,L,L,H]
+    y_intra = jnp.einsum("bctuh,bcuhp->bcthp", w, xc)
+
+    # Chunk-boundary states: h_chunk = sum_u exp(total - cum[u]) dt_u x_u B_u^T
+    state_decay = jnp.exp(total[:, :, None, :] - cum)  # [B,NC,L,H]
+    xb = jnp.einsum("bcuh,bcuhp,bcun->bchpn", dtc * state_decay, xc, Bc)
+
+    # Inter-chunk recurrence over chunk index (sequential scan of length NC).
+    def step(h_prev, inp):
+        xb_c, tot_c = inp  # [B,H,P,N], [B,H]
+        h_new = h_prev * jnp.exp(tot_c)[..., None, None] + xb_c
+        return h_new, h_prev
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), x.dtype)
+    xb_t = jnp.moveaxis(xb, 1, 0)  # [NC, B, H, P, N]
+    tot_t = jnp.moveaxis(total, 1, 0)  # [NC, B, H]
+    h_final, h_starts = jax.lax.scan(step, h0, (xb_t, tot_t))
+    h_starts = jnp.moveaxis(h_starts, 0, 1)  # [B, NC, H, P, N] (state at chunk start)
+
+    # Inter-chunk contribution: y_inter[t] = exp(cum[t]) * (C_t . h_start)
+    y_inter = jnp.einsum("bctn,bchpn->bcthp", Cc, h_starts) * jnp.exp(cum)[..., None]
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, h_final
+
+
+def mamba_forward(
+    x: jax.Array, params: dict, cfg: ModelConfig
+) -> jax.Array:
+    """Full-sequence Mamba2 block. x: [B, S, d_model]."""
+    ssm = cfg.ssm
+    d_inner, nheads, _ = _dims(cfg)
+    b, s, _ = x.shape
+
+    proj = x @ params["in_proj"]
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xin, B, C = jnp.split(xbc, [d_inner, d_inner + ssm.state_dim], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # [B,S,H]
+    a = -jnp.exp(params["A_log"])[None, None, :] * dt  # log decay
+    xh = xin.reshape(b, s, nheads, ssm.head_dim).astype(jnp.float32)
+
+    # Pad sequence to a chunk multiple.
+    chunk = min(ssm.chunk_size, s)
+    pad = (-s) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+
+    y, _ = _ssd_chunked(xh, dt, a, B.astype(jnp.float32), C.astype(jnp.float32), chunk)
+    y = y[:, :s]
+    y = y + params["D"][None, None, :, None] * xh[:, :s]  # skip connection
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm_scale"])
+    return y @ params["out_proj"]
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> MambaCache:
+    ssm = cfg.ssm
+    d_inner, nheads, conv_ch = _dims(cfg)
+    return MambaCache(
+        conv=jnp.zeros((batch, ssm.conv_width - 1, conv_ch), dtype),
+        ssm=jnp.zeros((batch, nheads, ssm.head_dim, ssm.state_dim), jnp.float32),
+    )
+
+
+def mamba_decode(
+    x: jax.Array,  # [B, 1, d_model]
+    params: dict,
+    cfg: ModelConfig,
+    cache: MambaCache,
+) -> tuple[jax.Array, MambaCache]:
+    """Single-token recurrent step."""
+    ssm = cfg.ssm
+    d_inner, nheads, conv_ch = _dims(cfg)
+    b = x.shape[0]
+
+    proj = x @ params["in_proj"]
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+
+    # Conv state update: window = [cache.conv, xbc]
+    window = jnp.concatenate([cache.conv, xbc[:, 0:1, :]], axis=1)  # [B, K, C]
+    w = params["conv_w"]  # [K, C]
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w) + params["conv_b"])
+    new_conv = window[:, 1:, :]
+
+    xin, B, C = jnp.split(conv_out, [d_inner, d_inner + ssm.state_dim], axis=-1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # [B,H]
+    a = jnp.exp(-jnp.exp(params["A_log"])[None, :] * dt)  # [B,H]
+    xh = xin.reshape(b, nheads, ssm.head_dim).astype(jnp.float32)
+
+    h_new = cache.ssm * a[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, B.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhpn->bhp", C.astype(jnp.float32), h_new)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm_scale"])
+    return y @ params["out_proj"], MambaCache(conv=new_conv, ssm=h_new)

@@ -1,0 +1,173 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly recurrent) with exponential gating and
+max-stabilizers.  Both expose full-sequence forward (lax.scan over time)
+and single-token decode with explicit state caches.
+
+xlstm-125m stacks alternating mLSTM/sLSTM blocks; neither uses attention,
+so the paper's technique is inapplicable here (DESIGN.md §5) — the arch is
+implemented without it and exercises the framework's attention-free path
+(including long_500k decode, which is O(1) per token in state size).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import dense_init, rms_norm
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array  # [B, H, P, P] matrix memory
+    n: jax.Array  # [B, H, P] normalizer
+    m: jax.Array  # [B, H] stabilizer
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # [B, D]
+    n: jax.Array  # [B, D]
+    m: jax.Array  # [B, D]
+    h: jax.Array  # [B, D] recurrent output
+
+
+# -- mLSTM ---------------------------------------------------------------------
+
+def mlstm_params(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    p = d // h
+    keys = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(keys[0], d, d, dtype),
+        "wk": dense_init(keys[1], d, d, dtype),
+        "wv": dense_init(keys[2], d, d, dtype),
+        "wi": dense_init(keys[3], d, h, dtype),  # input gate (exp)
+        "wf": dense_init(keys[4], d, h, dtype),  # forget gate
+        "wo": dense_init(keys[5], d, d, dtype),
+        "bi": jnp.zeros((h,), dtype),
+        "bf": jnp.ones((h,), dtype),  # bias toward remembering
+        "norm_scale": jnp.ones((d,), dtype),
+    }
+
+
+def _mlstm_step(state: MLSTMState, inp, head_dim: int):
+    q, k, v, i_raw, f_raw = inp  # q/k/v: [B,H,P]; gates: [B,H]
+    logf = -jax.nn.softplus(-f_raw)  # log sigmoid(f)
+    m_new = jnp.maximum(logf + state.m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(logf + state.m - m_new)
+    k_s = k / jnp.sqrt(jnp.asarray(head_dim, jnp.float32))
+    c_new = f_g[..., None, None] * state.c + i_g[..., None, None] * (
+        v[..., :, None] * k_s[..., None, :]
+    )
+    n_new = f_g[..., None] * state.n + i_g[..., None] * k_s
+    num = jnp.einsum("bhpq,bhq->bhp", c_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n_new, q)), 1.0)
+    h_out = num / den[..., None]
+    return MLSTMState(c_new, n_new, m_new), h_out
+
+
+def mlstm_forward(x: jax.Array, params: dict, cfg: ModelConfig) -> jax.Array:
+    b, s, d = x.shape
+    nh = cfg.num_heads
+    p = d // nh
+    q = (x @ params["wq"]).reshape(b, s, nh, p).astype(jnp.float32)
+    k = (x @ params["wk"]).reshape(b, s, nh, p).astype(jnp.float32)
+    v = (x @ params["wv"]).reshape(b, s, nh, p).astype(jnp.float32)
+    i_raw = (x @ params["wi"] + params["bi"]).astype(jnp.float32)  # [B,S,H]
+    f_raw = (x @ params["wf"] + params["bf"]).astype(jnp.float32)
+
+    init = MLSTMState(
+        c=jnp.zeros((b, nh, p, p), jnp.float32),
+        n=jnp.zeros((b, nh, p), jnp.float32),
+        m=jnp.full((b, nh), -1e30, jnp.float32),
+    )
+    xs = (
+        jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+        jnp.moveaxis(i_raw, 1, 0), jnp.moveaxis(f_raw, 1, 0),
+    )
+    _, hs = jax.lax.scan(lambda st, inp: _mlstm_step(st, inp, p), init, xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    h = rms_norm(h, params["norm_scale"])
+    return h @ params["wo"]
+
+
+def mlstm_decode(x, params, cfg: ModelConfig, state: MLSTMState):
+    b, _, d = x.shape
+    nh = cfg.num_heads
+    p = d // nh
+    q = (x @ params["wq"])[:, 0].reshape(b, nh, p).astype(jnp.float32)
+    k = (x @ params["wk"])[:, 0].reshape(b, nh, p).astype(jnp.float32)
+    v = (x @ params["wv"])[:, 0].reshape(b, nh, p).astype(jnp.float32)
+    i_raw = (x @ params["wi"] + params["bi"])[:, 0].astype(jnp.float32)
+    f_raw = (x @ params["wf"] + params["bf"])[:, 0].astype(jnp.float32)
+    new_state, h = _mlstm_step(state, (q, k, v, i_raw, f_raw), p)
+    h = h.reshape(b, 1, d).astype(x.dtype)
+    h = rms_norm(h, params["norm_scale"])
+    return h @ params["wo"], new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    nh = cfg.num_heads
+    p = cfg.d_model // nh
+    return MLSTMState(
+        c=jnp.zeros((batch, nh, p, p), jnp.float32),
+        n=jnp.zeros((batch, nh, p), jnp.float32),
+        m=jnp.full((batch, nh), -1e30, jnp.float32),
+    )
+
+
+# -- sLSTM ---------------------------------------------------------------------
+
+def slstm_params(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    keys = jax.random.split(key, 9)
+    p = {"norm_scale": jnp.ones((d,), dtype)}
+    for idx, gate in enumerate(("i", "f", "z", "o")):
+        p[f"w{gate}"] = dense_init(keys[idx], d, d, dtype)
+        p[f"r{gate}"] = dense_init(keys[4 + idx], d, d, dtype)  # recurrent
+        p[f"b{gate}"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def _slstm_step(params, state: SLSTMState, x_t: jax.Array):
+    """x_t: [B, D] (pre-activations use recurrent h)."""
+    h_prev = state.h
+    pre = lambda g: (  # noqa: E731
+        x_t @ params[f"w{g}"] + h_prev.astype(x_t.dtype) @ params[f"r{g}"] + params[f"b{g}"]
+    ).astype(jnp.float32)
+    i_raw, f_raw, z_raw, o_raw = pre("i"), pre("f"), pre("z"), pre("o")
+    logf = -jax.nn.softplus(-f_raw)
+    m_new = jnp.maximum(logf + state.m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(logf + state.m - m_new)
+    c_new = f_g * state.c + i_g * jnp.tanh(z_raw)
+    n_new = f_g * state.n + i_g
+    h_new = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMState(c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_forward(x: jax.Array, params: dict, cfg: ModelConfig) -> jax.Array:
+    b, s, d = x.shape
+    init = init_slstm_state(cfg, b)
+    _, hs = jax.lax.scan(
+        lambda st, xt: _slstm_step(params, st, xt), init, jnp.moveaxis(x, 1, 0)
+    )
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    h = rms_norm(h, params["norm_scale"])
+    return h
+
+
+def slstm_decode(x, params, cfg: ModelConfig, state: SLSTMState):
+    new_state, h = _slstm_step(params, state, x[:, 0])
+    h = h[:, None, :].astype(x.dtype)
+    return rms_norm(h, params["norm_scale"]), new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z, m=jnp.full((batch, d), -1e30, jnp.float32), h=z)

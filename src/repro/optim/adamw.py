@@ -1,0 +1,139 @@
+"""AdamW and Adafactor optimizers (pure pytree transforms, no optax).
+
+AdamW keeps fp32 (m, v) and an fp32 master copy of the params when training
+in bf16.  Adafactor factorizes the second moment for >= 2-D params — the
+choice for the MoE giants (arctic-480b: fp32 AdamW state would need ~18
+bytes/param; Adafactor needs ~4.1, see EXPERIMENTS.md memory table).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=zeros)
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        lr = self._lr(step)
+        b1, b2 = self.b1, self.b2
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * g * g
+            m_hat = m_new / (1 - b1 ** step.astype(jnp.float32))
+            v_hat = v_new / (1 - b2 ** step.astype(jnp.float32))
+            delta = m_hat / (jnp.sqrt(v_hat) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * delta).astype(p.dtype), m_new, v_new
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        updates = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree.map(lambda p, u: p + u, params, updates)
+        return new_params, AdamWState(step=step, m=m, v=v)
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    # Per-leaf dicts: either {"r", "c"} (factored) or {"v"} (unfactored).
+    stats: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    decay: float = 0.8  # beta2_t = 1 - step^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def init(self, params) -> AdafactorState:
+        def stat(p):
+            if p.ndim >= 2:
+                return {
+                    "r": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return AdafactorState(
+            step=jnp.zeros((), jnp.int32),
+            stats=jax.tree.map(stat, params),
+        )
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads, state: AdafactorState, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta2 = 1.0 - t ** (-self.decay)
+        lr = self._lr(step)
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_p = treedef.flatten_up_to(params)
+        flat_s = treedef.flatten_up_to(state.stats)
+
+        new_p, new_s = [], []
+        for g, p, s in zip(flat_g, flat_p, flat_s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + self.eps
+            if g.ndim >= 2:
+                r = beta2 * s["r"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                c = beta2 * s["c"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                r_norm = r / jnp.maximum(
+                    jnp.mean(r, axis=-1, keepdims=True), self.eps
+                )
+                v_hat = r_norm[..., None] * c[..., None, :]
+                upd = g / jnp.sqrt(v_hat + self.eps)
+                s_new = {"r": r, "c": c}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                upd = g / jnp.sqrt(v + self.eps)
+                s_new = {"v": v}
+            # Update clipping (Adafactor's RMS clip).
+            rms = jnp.sqrt(jnp.mean(upd * upd) + self.eps)
+            upd = upd / jnp.maximum(1.0, rms / self.clip_threshold)
+            if self.weight_decay:
+                upd = upd + self.weight_decay * p.astype(jnp.float32)
+            new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+            new_s.append(s_new)
+
+        return (
+            jax.tree.unflatten(treedef, new_p),
+            AdafactorState(step=step, stats=jax.tree.unflatten(treedef, new_s)),
+        )
+
+
+def make_optimizer(name: str, lr, **kw):
+    if name == "adamw":
+        return AdamW(lr=lr, **kw)
+    if name == "adafactor":
+        return Adafactor(lr=lr, **kw)
+    raise ValueError(name)

@@ -1,0 +1,27 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(peak_lr: float, warmup_steps: int, total_steps: int,
+                       final_frac: float = 0.1):
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        progress = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * progress)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule
+
+
+def linear_warmup_constant(peak_lr: float, warmup_steps: int):
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        return peak_lr * jnp.minimum(1.0, step / max(warmup_steps, 1))
+
+    return schedule

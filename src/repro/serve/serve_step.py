@@ -1,0 +1,39 @@
+"""Serving steps: prefill (full-sequence forward) and decode (one token
+against the KV/state caches).  Per the paper §8.3 the FSA/flash path is used
+for prefill only; decode is the memory-bound einsum path.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import decode_step, forward
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits = forward(
+            params,
+            cfg,
+            tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            positions=batch.get("positions"),
+        )
+        # Return only the last-position logits (what serving samples from);
+        # keeps the output payload O(B x V) instead of O(B x S x V).
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, greedy: bool = True):
+    def serve_step(params, cache, tokens, position):
+        logits, new_cache = decode_step(params, cfg, tokens, cache, position)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], logits, new_cache
+
+    return serve_step

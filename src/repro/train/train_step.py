@@ -1,0 +1,82 @@
+"""Training step factory: value_and_grad + optimizer, with optional
+microbatch gradient accumulation and optional int8-compressed DP reduction.
+
+All functions are pure and pjit-able; sharding comes from in/out_shardings
+at jit time (see launch/dryrun.py and launch/train.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import lm_loss
+from repro.optim.grad_compress import compress_with_feedback, dequantize_int8
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer,
+    *,
+    num_microbatches: int = 1,
+    compress_grads: bool = False,
+):
+    """Returns train_step(params, opt_state, batch [, residual]) -> ..."""
+
+    def loss_fn(params, batch):
+        return lm_loss(params, cfg, batch)
+
+    def compute_grads(params, batch):
+        if num_microbatches == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def split(x):
+            mb = x.shape[0] // num_microbatches
+            return x.reshape(num_microbatches, mb, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            loss_acc, grad_acc = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            grad_acc = jax.tree.map(jnp.add, grad_acc, g)
+            return (loss_acc + loss, grad_acc), None
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zero), micro)
+        inv = 1.0 / num_microbatches
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    if not compress_grads:
+        def train_step(params, opt_state, batch):
+            loss, grads = compute_grads(params, batch)
+            new_params, new_opt = optimizer.update(grads, opt_state, params)
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+            )
+            return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+        return train_step
+
+    def train_step_compressed(params, opt_state, batch, residual):
+        loss, grads = compute_grads(params, batch)
+        # int8 quantization with error feedback before the (cross-pod) grad
+        # reduction XLA derives from the sharding; the dequantized values
+        # feed the optimizer, the quantization error carries to next step.
+        q, scales, new_residual = compress_with_feedback(grads, residual)
+        grads = jax.tree.map(dequantize_int8, q, scales)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, new_residual, {"loss": loss}
+
+    return train_step_compressed
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        return lm_loss(params, cfg, batch)
+
+    return eval_step

@@ -1,0 +1,117 @@
+"""Training loop with checkpoint/restart, preemption handling, straggler
+watchdog, async checkpointing, and deterministic data — the glue layer that
+makes the framework runnable unattended.
+
+Single-process on this container; every policy (atomic checkpoints, resume
+from latest, watchdog thresholds, preemption drain) is the multi-host one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data import DataConfig, make_source
+from repro.dist.fault import PreemptionHandler, StepWatchdog
+from repro.models import init_params, lm_loss
+from repro.optim import make_optimizer
+from repro.optim.schedules import cosine_with_warmup
+from .train_step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    optimizer: str = "adamw"
+    peak_lr: float = 3e-4
+    warmup_steps: int = 10
+    num_microbatches: int = 1
+    log_every: int = 10
+    seed: int = 0
+    watchdog_factor: float = 10.0
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        shape: ShapeConfig,
+        tcfg: TrainerConfig,
+        *,
+        token_file: Optional[str] = None,
+        hooks: Optional[dict[str, Callable]] = None,
+    ):
+        self.cfg, self.shape, self.tcfg = cfg, shape, tcfg
+        self.data = make_source(cfg, shape, DataConfig(seed=tcfg.seed), token_file)
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
+        self.watchdog = StepWatchdog(timeout_factor=tcfg.watchdog_factor)
+        self.preempt = PreemptionHandler(install=False)
+        self.hooks = hooks or {}
+
+        sched = cosine_with_warmup(tcfg.peak_lr, tcfg.warmup_steps, tcfg.total_steps)
+        self.optimizer = make_optimizer(tcfg.optimizer, lr=sched)
+        self.step_fn = jax.jit(
+            make_train_step(cfg, self.optimizer, num_microbatches=tcfg.num_microbatches)
+        )
+
+    # -- state ------------------------------------------------------------
+
+    def init_state(self) -> dict:
+        params = init_params(self.cfg, jax.random.PRNGKey(self.tcfg.seed))
+        return {
+            "params": params,
+            "opt": self.optimizer.init(params),
+            "step": 0,
+        }
+
+    def restore_or_init(self) -> dict:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return self.init_state()
+        template = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            {k: v for k, v in self.init_state().items() if k != "step"},
+        )
+        restored = self.ckpt.restore(latest, template)
+        restored["step"] = latest
+        return restored
+
+    # -- loop --------------------------------------------------------------
+
+    def run(self, state: Optional[dict] = None) -> dict:
+        state = state or self.restore_or_init()
+        losses = []
+        while state["step"] < self.tcfg.total_steps:
+            if self.preempt.requested:
+                self.ckpt.save(state["step"], {k: state[k] for k in ("params", "opt")})
+                break
+            step = state["step"]
+            batch = {k: jnp.asarray(v) for k, v in self.data.batch(step).items()}
+            self.watchdog.start_step()
+            params, opt, metrics = self.step_fn(state["params"], state["opt"], batch)
+            jax.block_until_ready(metrics["loss"])
+            dur = self.watchdog.end_step()
+            state = {"params": params, "opt": opt, "step": step + 1}
+            losses.append(float(metrics["loss"]))
+            if "on_step" in self.hooks:
+                self.hooks["on_step"](state, metrics)
+            if (step + 1) % self.tcfg.log_every == 0:
+                print(
+                    f"step {step + 1} loss {float(metrics['loss']):.4f} "
+                    f"gnorm {float(metrics['grad_norm']):.3f} {dur * 1e3:.0f} ms"
+                )
+            if (step + 1) % self.tcfg.ckpt_every == 0:
+                self.ckpt.save_async(step + 1, {k: state[k] for k in ("params", "opt")})
+        self.ckpt.wait()
+        state["losses"] = losses
+        return state

@@ -1,0 +1,105 @@
+"""FSA device simulator + kernel API (paper §4-5) behaviour tests."""
+
+import numpy as np
+import pytest
+
+from repro.core import fsa_kernel_api as F
+from repro.core.fsa_flash import fsa_flash_attention
+from repro.core.fsa_sim import FSADevice
+from repro.core.systolic_model import fsa_attention_cycles
+
+
+def _exact_attention(q, k, v):
+    qf, kf, vf = (a.astype(np.float64) for a in (q, k, v))
+    s = qf @ kf.T / np.sqrt(q.shape[-1])
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    return p @ vf
+
+
+@pytest.mark.parametrize("seq", [128, 256, 512])
+def test_listing2_kernel_accuracy(seq):
+    rng = np.random.default_rng(0)
+    d = 128
+    q, k, v = (rng.standard_normal((seq, d)).astype(np.float16) for _ in range(3))
+    res = fsa_flash_attention(q, k, v)
+    ref = _exact_attention(q, k, v)
+    mae = np.abs(res.output - ref).mean()
+    assert mae < 2e-3  # paper Table 2 territory (PWL exp2 + fp16 inputs)
+
+
+@pytest.mark.parametrize("seq", [128, 256, 1024])
+def test_cycle_counts_match_section35(seq):
+    """Simulator timeline == the paper's closed-form 5N+10 / 2N+20 cycles."""
+    rng = np.random.default_rng(1)
+    d = 128
+    q, k, v = (rng.standard_normal((seq, d)).astype(np.float16) for _ in range(3))
+    res = fsa_flash_attention(q, k, v)
+    assert res.cycles == fsa_attention_cycles(seq, d)
+
+
+def test_table2_distribution_error_envelope():
+    """Table 2 protocol: errors under the paper's heavy-tail input dist stay
+    inside the paper's reported envelope (MAE <= 3.4e-2 at its worst).
+
+    Our simulator keeps fp32 inter-PE partial sums (the paper's RTL appears
+    to quantize more aggressively — see EXPERIMENTS.md), so our absolute
+    MAE is *smaller* than the paper's; the envelope bound is what transfers.
+    """
+    rng = np.random.default_rng(2)
+    for seq in (128, 512):
+        shape = (seq, 128)
+
+        def draw():
+            x = rng.standard_normal(shape) + rng.standard_normal(shape) * 10.0 * (
+                rng.random(shape) < 0.001
+            )
+            return x.astype(np.float16)
+
+        q, k, v = draw(), draw(), draw()
+        res = fsa_flash_attention(q, k, v)
+        mae = np.abs(res.output - _exact_attention(q, k, v)).mean()
+        assert mae < 3.4e-2
+
+
+def test_scratchpad_capacity_enforced():
+    dev = FSADevice(spad_bytes=1024)
+    dev.alloc("spad", "a", (16, 16), np.float16)  # 512 B
+    with pytest.raises(MemoryError):
+        dev.alloc("spad", "b", (32, 32), np.float16)  # +2048 B
+
+
+def test_accum_capacity_enforced():
+    with pytest.raises(MemoryError):
+        fsa_flash_attention(
+            np.zeros((128, 128), np.float16),
+            np.zeros((128, 128), np.float16),
+            np.zeros((128, 128), np.float16),
+            accum_bytes=1024,
+        )
+
+
+def test_tile_type_safety():
+    dev = FSADevice()
+
+    @F.kernel()
+    def bad(Q: F.MTile, K: F.MTile, Vt: F.MTile):
+        s = F.alloc_spad((128, 128))
+        F.store_tile(s, Q)  # store_tile wants ATile -> AssertionError
+        return Q
+
+    with pytest.raises(AssertionError):
+        bad(*(np.zeros((128, 128), np.float16),) * 3)
+
+
+def test_program_records_instruction_stream():
+    rng = np.random.default_rng(3)
+    q, k, v = (rng.standard_normal((256, 128)).astype(np.float16) for _ in range(3))
+    res = fsa_flash_attention(q, k, v)
+    ops = [i.op for i in res.program.instrs]
+    # 2 outer iterations x (load Q + 2 inner x (ls/load/score/load/value)) + epilogue
+    assert ops.count("attn_score") == 4
+    assert ops.count("attn_value") == 4
+    assert ops.count("reciprocal") == 2
+    assert ops.count("attn_lse_norm") == 2
+    assert ops.count("store_tile") == 2

@@ -1,0 +1,98 @@
+"""MoE dispatch invariants (hypothesis property tests on _moe_block)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.moe import _moe_block, moe_forward, moe_params
+
+
+def _cfg(e=8, k=2, d=16, ff=32, cf=1.25):
+    return ModelConfig(
+        name="m", family="moe", num_layers=1, d_model=d, num_heads=2,
+        num_kv_heads=2, d_ff=ff, vocab_size=64, dtype="float32", remat=False,
+        moe=MoEConfig(num_experts=e, top_k=k, d_ff_expert=ff, capacity_factor=cf),
+    )
+
+
+def _params(cfg, seed=0):
+    return moe_params(jax.random.PRNGKey(seed), cfg, jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=4),   # batch
+    st.integers(min_value=2, max_value=16),  # seq
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_expert_partition_sums_to_full(b, s, seed):
+    """Partitioning experts across ranks and summing partials == running
+    all experts on one rank (the shard_map psum-combine invariant)."""
+    cfg = _cfg()
+    p = _params(cfg, seed % 100)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, s, cfg.d_model))
+    full = _moe_block(x, p["router"], p["gate"], p["up"], p["down"], cfg, 0)
+    half = cfg.moe.num_experts // 2
+    lo = _moe_block(x, p["router"], p["gate"][:half], p["up"][:half],
+                    p["down"][:half], cfg, 0)
+    hi = _moe_block(x, p["router"], p["gate"][half:], p["up"][half:],
+                    p["down"][half:], cfg, half)
+    np.testing.assert_allclose(np.asarray(lo + hi), np.asarray(full), atol=1e-5)
+
+
+def test_no_drop_at_high_capacity_matches_dense_topk():
+    """With capacity_factor -> inf, MoE output == explicit dense top-k mix."""
+    cfg = _cfg(cf=100.0)
+    p = _params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    out = moe_forward(x, p, cfg)
+
+    xf = x.reshape(-1, cfg.d_model)
+    logits = xf @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.moe.top_k)
+    top_p = top_p / top_p.sum(-1, keepdims=True)
+    y = jnp.zeros_like(xf)
+    for t in range(xf.shape[0]):
+        for j in range(cfg.moe.top_k):
+            e = int(top_e[t, j])
+            h = jax.nn.silu(xf[t] @ p["gate"][e]) * (xf[t] @ p["up"][e])
+            y = y.at[t].add(top_p[t, j] * (h @ p["down"][e]))
+    np.testing.assert_allclose(
+        np.asarray(out.reshape(-1, cfg.d_model)), np.asarray(y), atol=1e-4
+    )
+
+
+def test_capacity_drops_are_bounded():
+    """Output of a capacity-1 config differs from no-drop but stays finite
+    and at most top_k-scaled (dropped tokens pass through as zeros)."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 32, 16))
+    cfg_tight = _cfg(cf=0.1)
+    cfg_loose = _cfg(cf=100.0)
+    p = _params(cfg_tight)
+    tight = moe_forward(x, p, cfg_tight)
+    loose = moe_forward(x, p, cfg_loose)
+    assert bool(jnp.isfinite(tight).all())
+    # tight drops most pairs: its norm must be well below the no-drop norm
+    assert float(jnp.linalg.norm(tight)) < float(jnp.linalg.norm(loose))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_token_order_equivariance(seed):
+    """Permuting tokens permutes outputs identically (per-group routing is
+    order-dependent only through capacity ties; use no-drop capacity)."""
+    cfg = _cfg(cf=100.0)
+    p = _params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 8, cfg.d_model))
+    perm = jax.random.permutation(jax.random.PRNGKey(seed + 1), 8)
+    out = moe_forward(x, p, cfg)[0]
+    out_perm = moe_forward(x[:, perm], p, cfg)[0]
+    np.testing.assert_allclose(
+        np.asarray(out[perm]), np.asarray(out_perm), atol=1e-5
+    )

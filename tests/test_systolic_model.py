@@ -1,0 +1,61 @@
+"""Cycle/utilization model tests (paper §2.2, §3.5, §6.1, §8.2)."""
+
+import pytest
+
+from repro.core.systolic_model import (
+    attention_flops,
+    baseline_utilization,
+    figure11,
+    fsa_attention_cycles,
+    fsa_tile_cycles,
+    fsa_utilization,
+    matmul_cycles,
+    naive_tile_cycles,
+)
+
+
+def test_matmul_cycles_section22():
+    """N x N array, N x M moving matrix: M + 3N - 1 cycles."""
+    assert matmul_cycles(1024, 128) == 1024 + 3 * 128 - 1
+
+
+def test_tile_cycle_formulas():
+    for n in (64, 128, 256):
+        assert fsa_tile_cycles(n) == 5 * n + 10
+        assert fsa_tile_cycles(n, single_direction=True) == 6 * n + 10
+        assert naive_tile_cycles(n) == 8 * n - 2
+
+
+def test_fsa_beats_naive_per_tile():
+    assert fsa_tile_cycles(128) < naive_tile_cycles(128)
+
+
+def test_utilization_asymptote():
+    """Util -> 2N/(5N+10) as seq grows (~0.394 at N=128)."""
+    assert fsa_utilization(16384) == pytest.approx(2 * 128 / (5 * 128 + 10), rel=0.01)
+    assert fsa_utilization(2048) < fsa_utilization(16384)
+
+
+def test_figure11_reproduces_paper_speedups():
+    fig = figure11()
+    assert fig["speedup_vs_tpu_v5e"] == pytest.approx(1.77, rel=0.01)
+    assert fig["speedup_vs_neuron_v2"] == pytest.approx(4.83, rel=0.01)
+    # Paper §6.1: Neuron achieves <25% utilization; FSA ~0.39.
+    assert fig["mean_neuron_v2"] < 0.25
+    assert 0.35 < fig["mean_fsa"] < 0.45
+
+
+def test_single_direction_variant_still_beats_baselines():
+    """§8.2: the area-optimized variant still outperforms both baselines."""
+    util = fsa_utilization(8192, single_direction=True)
+    assert util > baseline_utilization("tpu_v5e", 8192)
+    assert util > baseline_utilization("neuron_v2", 8192)
+
+
+def test_attention_flops_formula():
+    assert attention_flops(2048, 128) == 4 * 2048 * 2048 * 128
+
+
+def test_whole_head_cycles():
+    # Tr = Tc = 2: 4 inner tiles + 2 rescales.
+    assert fsa_attention_cycles(256) == 4 * (5 * 128 + 10) + 2 * (2 * 128 + 20)
