@@ -1,0 +1,115 @@
+"""Forward-compat shims for the modern JAX mesh/sharding surface.
+
+The codebase (and its tests) are written against the current JAX API:
+
+  * ``jax.set_mesh(mesh)`` as a context manager,
+  * ``jax.make_mesh(..., axis_types=...)``,
+  * ``jax.sharding.AxisType``,
+  * ``jax.sharding.get_abstract_mesh()`` for the ambient mesh,
+  * ``jax.shard_map(f, in_specs=..., out_specs=...)`` resolving the mesh
+    from the ambient context.
+
+Older jaxlib builds (0.4.x, as baked into this container) expose the same
+functionality under different names: ``Mesh.__enter__`` for the ambient
+resource env, ``jax.experimental.shard_map.shard_map`` with an explicit
+mesh argument, and no ``AxisType`` at all.  ``ensure()`` installs thin
+adapters for whichever pieces are missing; on a current JAX it is a no-op.
+
+Every patch is guarded on attribute absence, so upgrading JAX silently
+retires the shim.
+"""
+
+from __future__ import annotations
+
+import enum
+import inspect
+import math
+
+import jax
+
+
+def _ambient_physical_mesh():
+    """The mesh installed by ``with mesh:`` / our ``set_mesh`` shim."""
+    from jax._src import mesh as mesh_lib
+
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+class _AxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+class _MeshContext:
+    """``with jax.set_mesh(mesh):`` adapter over ``Mesh.__enter__``."""
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+
+    def __enter__(self):
+        self.mesh.__enter__()
+        return self.mesh
+
+    def __exit__(self, *exc):
+        return self.mesh.__exit__(*exc)
+
+
+def _make_mesh_shim(orig):
+    def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        del axis_types  # old jax: all axes behave as Auto
+        if devices is None:
+            n = math.prod(axis_shapes)
+            all_devices = jax.devices()
+            if n != len(all_devices):
+                devices = all_devices[:n]
+        return orig(axis_shapes, axis_names, devices=devices)
+
+    return make_mesh
+
+
+def _shard_map_shim(f, *, mesh=None, in_specs, out_specs, check_rep=False,
+                    **kwargs):
+    """New-style ``jax.shard_map``: mesh optional, taken from the ambient
+    context at call time (the mesh is entered around the jit that traces
+    the shard_map, so it is visible while tracing)."""
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    del kwargs  # newer-API extras (axis_names=...) have no 0.4.x analogue
+
+    def call(*args):
+        m = mesh if mesh is not None else _ambient_physical_mesh()
+        if m is None or m.empty:
+            raise ValueError(
+                "shard_map: no mesh found — pass mesh= or enter "
+                "`with jax.set_mesh(mesh):`"
+            )
+        return _shard_map(
+            f, m, in_specs=in_specs, out_specs=out_specs, check_rep=False
+        )(*args)
+
+    return call
+
+
+def ensure() -> None:
+    """Install the missing pieces of the modern mesh API (idempotent)."""
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        jax.sharding.get_abstract_mesh = _ambient_physical_mesh
+
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _MeshContext
+
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _shard_map_shim
+
+    if (
+        hasattr(jax, "make_mesh")
+        and not getattr(jax.make_mesh, "_repro_compat", False)
+        and "axis_types" not in inspect.signature(jax.make_mesh).parameters
+    ):
+        shim = _make_mesh_shim(jax.make_mesh)
+        shim._repro_compat = True
+        jax.make_mesh = shim

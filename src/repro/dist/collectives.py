@@ -1,0 +1,73 @@
+"""Mesh-aware logical constraint helpers.
+
+``constrain`` is the one entry point model code uses to express layout
+intent (Megatron-SP residual sharding, dp_only batch spans, ...).  It is a
+*logical* annotation: axis names that don't exist on the ambient mesh are
+dropped, dims whose size doesn't divide the named axes are left
+unconstrained, and with no ambient mesh at all it is the identity — so the
+same model code runs unmodified on a laptop CPU and on a multi-pod slice.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+AxisSpec = Union[None, str, Sequence[str]]
+
+
+def _ambient_mesh():
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or getattr(mesh, "empty", False):
+        return None
+    return mesh
+
+
+def _ambient_axis_names() -> tuple[str, ...]:
+    """Axis names of the mesh currently in scope (() when unsharded)."""
+    mesh = _ambient_mesh()
+    return tuple(mesh.axis_names) if mesh is not None else ()
+
+
+def _resolve_entry(entry: AxisSpec, dim_size: int, mesh) -> AxisSpec:
+    """Filter one PartitionSpec entry against a concrete mesh."""
+    if entry is None:
+        return None
+    axes = (entry,) if isinstance(entry, str) else tuple(entry)
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    if not axes:
+        return None
+    total = 1
+    for a in axes:
+        total *= int(mesh.shape[a])
+    if total == 1 or dim_size % total != 0:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def constrain(x: jax.Array, *spec: AxisSpec) -> jax.Array:
+    """``with_sharding_constraint`` against the ambient mesh, forgivingly.
+
+    ``spec`` gives one entry per dim of ``x``: an axis name, a tuple of
+    axis names (the dim is sharded over their product), or None.  Missing
+    trailing entries mean unconstrained.  No-op without an ambient mesh.
+    """
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    entries = [
+        _resolve_entry(spec[d] if d < len(spec) else None, x.shape[d], mesh)
+        for d in range(x.ndim)
+    ]
+    if all(e is None for e in entries):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*entries))
+
+
+def psum_mean(x: jax.Array, axis_name: str) -> jax.Array:
+    """Mean-reduce across one mesh axis (shard_map bodies only)."""
+    return jax.lax.psum(x, axis_name) / jax.lax.psum(
+        jax.numpy.ones((), x.dtype), axis_name
+    )

@@ -1,0 +1,98 @@
+"""Elastic mesh rescale: resume any checkpoint on any (valid) mesh shape.
+
+Checkpoints store unsharded logical arrays (see ``repro.checkpoint``);
+re-placing them on a different device topology is therefore a pure
+sharding decision.  ``rescale_plan`` validates that the model's dimensions
+actually divide the new mesh (the failure mode that otherwise surfaces as
+an opaque XLA error hours into a resume) and re-derives the full parameter
+and optimizer-state sharding trees; ``apply_rescale`` moves a restored
+state tree onto the plan's placements.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+
+from repro.configs.base import ModelConfig
+from .sharding import param_shardings, zero1_shardings
+
+
+@dataclasses.dataclass
+class RescalePlan:
+    old_devices: Optional[int]
+    new_devices: int
+    mesh: Any
+    param_shardings: Any
+    opt_shardings: Any
+
+
+def _validate(cfg: ModelConfig, mesh) -> None:
+    sizes = {str(a): int(mesh.shape[a]) for a in mesh.axis_names}
+    model = sizes.get("model", 1)
+    problems = []
+    if model > 1:
+        if cfg.num_heads % model:
+            problems.append(
+                f"num_heads={cfg.num_heads} not divisible by model axis {model}"
+            )
+        if cfg.num_kv_heads % model and cfg.num_heads % model == 0:
+            # GQA: KV heads must also split (or be replicated-per-group,
+            # which our rules don't do) — reject rather than silently
+            # degrade TP to replication on K/V.
+            problems.append(
+                f"num_kv_heads={cfg.num_kv_heads} not divisible by model axis {model}"
+            )
+        if cfg.d_ff % model:
+            # The MLP gate/up/down projections are the largest dense
+            # parameter group; if d_ff can't split, sharding._fit would
+            # silently replicate them on every TP rank — reject instead.
+            problems.append(
+                f"d_ff={cfg.d_ff} not divisible by model axis {model}"
+            )
+        if cfg.vocab_size % model:
+            problems.append(
+                f"vocab_size={cfg.vocab_size} not divisible by model axis "
+                f"{model} (embedding shards the vocab dim)"
+            )
+        if cfg.moe is not None and cfg.moe.num_experts % model:
+            problems.append(
+                f"num_experts={cfg.moe.num_experts} not divisible by "
+                f"model axis {model} (expert parallelism)"
+            )
+    if problems:
+        raise ValueError(
+            f"mesh {dict(sizes)} incompatible with {cfg.name}: "
+            + "; ".join(problems)
+        )
+
+
+def rescale_plan(
+    cfg: ModelConfig,
+    pshapes: Any,
+    oshapes: Any,
+    new_mesh,
+    *,
+    old_devices: Optional[int] = None,
+) -> RescalePlan:
+    """Derive shardings for resuming on ``new_mesh``; raises ValueError if
+    the model cannot be laid out on it."""
+    _validate(cfg, new_mesh)
+    new_devices = math.prod(int(new_mesh.shape[a]) for a in new_mesh.axis_names)
+    return RescalePlan(
+        old_devices=old_devices,
+        new_devices=new_devices,
+        mesh=new_mesh,
+        param_shardings=param_shardings(pshapes, cfg, new_mesh),
+        opt_shardings=zero1_shardings(oshapes, cfg, new_mesh),
+    )
+
+
+def apply_rescale(state: Any, shardings: Any) -> Any:
+    """Place a (restored, host-resident) state tree onto new shardings."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state, shardings
+    )

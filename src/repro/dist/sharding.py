@@ -1,0 +1,181 @@
+"""Path-based partition rules over the ("pod", "data", "model") mesh.
+
+Conventions (Megatron TP+DP+SP with ZeRO-1 optimizer state):
+
+  * "model" — tensor parallelism.  Column-parallel projections (wq/wk/wv,
+    MLP gate/up, SSM in_proj) shard their *output* dim; row-parallel
+    projections (wo, MLP down, SSM out_proj) shard their *input* dim;
+    embeddings shard the vocab dim; MoE expert banks shard the expert dim
+    (expert parallelism — see ``repro.models.moe``).
+  * "data" — data parallelism.  Parameters are replicated over it; the
+    optimizer state is additionally partitioned over it (ZeRO-1); batches
+    shard their leading dim over ("pod", "data").
+  * "pod"  — folds into data parallelism here (the pipeline module gives
+    it its other meaning).
+
+Every rule is *fitted*: an axis is only emitted when the dim size divides
+the axis-size product, so the same rule table serves every architecture in
+the registry and any mesh shape — undividable dims degrade to replication
+rather than erroring.  ``param_pspec`` is the pure rule function (unit-
+testable without devices); the ``*_shardings`` helpers close over a
+concrete mesh and return NamedSharding trees for jit in/out_shardings.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+DATA_AXES = ("pod", "data")
+
+# Projections whose output (last) dim is TP-sharded.
+_COL_PARALLEL = {
+    "wq", "wk", "wv", "bq", "bk", "bv",  # attention QKV (+bias)
+    "gate", "up",                        # MLP in-projections
+    "in_proj",                           # mamba2
+    "wi", "wf", "wz",                    # xLSTM gate in-projections
+}
+# Projections whose input (second-to-last) dim is TP-sharded.
+_ROW_PARALLEL = {"wo", "down", "out_proj"}
+# Adafactor factored-stat leaves: strip to reach the param path.
+_STAT_LEAVES = {"r", "c", "v"}
+
+
+def _path_str(path) -> str:
+    """tree_util key path -> "a/b/c" (dict keys only; tuple indices kept)."""
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _fit(entry, dim_size: int, sizes: dict[str, int]):
+    """Keep an axis group only if every axis exists and the product divides."""
+    if entry is None:
+        return None
+    axes = (entry,) if isinstance(entry, str) else tuple(entry)
+    axes = tuple(a for a in axes if sizes.get(a, 0) > 1)
+    total = 1
+    for a in axes:
+        total *= sizes[a]
+    if not axes or dim_size % total != 0:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def param_pspec(
+    path: str,
+    shape: tuple[int, ...],
+    cfg: ModelConfig,
+    data_size: int,
+    model_size: int,
+) -> P:
+    """Partition spec for one parameter leaf, identified by its tree path.
+
+    ``path`` is the "/"-joined key path (e.g. "layers/attn/wq").  Stacked
+    layer params carry a leading scan dim which is never sharded; the rules
+    therefore address dims from the *trailing* end.  Dims that don't divide
+    the proposed axes are left replicated.
+    """
+    sizes = {"data": data_size, "model": model_size}
+    parts = [p for p in re.split(r"[./]", path) if p]
+    name = parts[-1] if parts else ""
+    if name in _STAT_LEAVES and len(parts) > 1:  # adafactor r/c/v stats
+        name = parts[-2]
+    rank = len(shape)
+    spec: list[Any] = [None] * rank
+
+    if rank == 0:
+        return P()
+    if name == "embed":
+        spec[0] = "model"  # vocab dim
+    elif name == "lm_head":
+        spec[rank - 1] = "model"  # [d, V]
+    elif parts and "moe" in parts and name in ("gate", "up", "down") and rank >= 3:
+        spec[rank - 3] = "model"  # expert dim: EP
+    elif name == "router":
+        pass  # replicated (fp32, tiny, read by every rank)
+    elif name in _COL_PARALLEL and rank >= 1:
+        spec[rank - 1] = "model"
+    elif name in _ROW_PARALLEL and rank >= 2:
+        spec[rank - 2] = "model"
+
+    spec = [_fit(e, shape[d], sizes) for d, e in enumerate(spec)]
+    return P(*spec)
+
+
+def _mesh_sizes(mesh) -> dict[str, int]:
+    return {str(a): int(mesh.shape[a]) for a in mesh.axis_names}
+
+
+def param_shardings(pshapes: Any, cfg: ModelConfig, mesh) -> Any:
+    """NamedSharding tree for the parameters (TP over "model")."""
+    sizes = _mesh_sizes(mesh)
+    data, model = sizes.get("data", 1), sizes.get("model", 1)
+
+    def one(path, leaf):
+        spec = param_pspec(_path_str(path), tuple(leaf.shape), cfg, data, model)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, pshapes)
+
+
+def zero1_shardings(oshapes: Any, cfg: ModelConfig, mesh) -> Any:
+    """Optimizer-state shardings: the param's TP layout plus a ZeRO-1
+    partition — the first still-replicated divisible dim of every stat is
+    sharded over "data", so AdamW moments / Adafactor factors never cost
+    replicated-parameter memory on the DP axis."""
+    sizes = _mesh_sizes(mesh)
+    data, model = sizes.get("data", 1), sizes.get("model", 1)
+
+    def one(path, leaf):
+        shape = tuple(leaf.shape)
+        spec = list(param_pspec(_path_str(path), shape, cfg, data, model))
+        if data > 1:
+            for d in range(len(shape)):
+                if spec[d] is None and shape[d] % data == 0 and shape[d] >= data:
+                    spec[d] = "data"
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, oshapes)
+
+
+def batch_pspec(batch: Any, mesh, cfg: Optional[ModelConfig] = None) -> Any:
+    """Batch shardings: leading (global-batch) dim over every data axis
+    present on the mesh; scalars replicated."""
+    del cfg  # uniform across archs — kept for call-site symmetry
+    sizes = _mesh_sizes(mesh)
+    daxes = tuple(a for a in DATA_AXES if sizes.get(a, 0) > 1)
+
+    def one(leaf):
+        shape = tuple(leaf.shape)
+        entry = _fit(daxes, shape[0], sizes) if shape else None
+        if entry is None:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(entry, *([None] * (len(shape) - 1))))
+
+    return jax.tree.map(one, batch)
+
+
+def cache_shardings(cache: Any, cfg: ModelConfig, mesh) -> Any:
+    """KV/state-cache shardings.  Stacked cache leaves are
+    [num_layers, batch, ...]: the batch dim shards over the data axes and,
+    for attention KV tensors [L, B, S, H, d], the head dim over "model"
+    (matching the column-parallel K/V projections that fill them)."""
+    sizes = _mesh_sizes(mesh)
+    daxes = tuple(a for a in DATA_AXES if sizes.get(a, 0) > 1)
+
+    def one(leaf):
+        shape = tuple(leaf.shape)
+        rank = len(shape)
+        spec: list[Any] = [None] * rank
+        if rank >= 2:
+            spec[1] = _fit(daxes, shape[1], sizes)
+        if rank >= 4:
+            spec[rank - 2] = _fit("model", shape[rank - 2], sizes)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, cache)

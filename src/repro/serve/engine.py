@@ -22,8 +22,12 @@ from repro.configs.base import ModelConfig
 from repro.models import decode_step, forward, init_cache
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Request:
+    # eq=False: the generated __eq__ would compare the ndarray `prompt`
+    # field, making `r in wave` membership raise ("truth value of an array
+    # is ambiguous") for distinct same-length prompts.  Requests are
+    # identity-equal; `rid` is the stable external key.
     rid: int
     prompt: np.ndarray  # [len] int32
     max_new_tokens: int = 16

@@ -1,0 +1,103 @@
+"""Deterministic micro-fallback for `hypothesis` (used only when the real
+package is not installed — see conftest.py).
+
+Implements exactly the surface this test suite uses: ``@given`` over
+``st.integers`` / ``st.floats`` / ``st.booleans`` plus ``@settings`` with
+``max_examples``.  Examples are drawn from a PRNG seeded by the test's
+qualified name, so runs are reproducible; there is no shrinking and no
+example database.  Install the real dependency (``pip install -e .[dev]``)
+for full property-based testing.
+"""
+
+from __future__ import annotations
+
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int = 0, max_value: int = 2**31 - 1) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def floats(
+    min_value: float = 0.0,
+    max_value: float = 1.0,
+    allow_nan: bool = True,
+    allow_infinity: bool = True,
+    width: int = 64,
+) -> _Strategy:
+    del allow_nan, allow_infinity, width
+    lo, hi = float(min_value), float(max_value)
+
+    def draw(rng: random.Random) -> float:
+        # Bias toward the boundaries, where PWL/exp edge cases live.
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        return rng.uniform(lo, hi)
+
+    return _Strategy(draw)
+
+
+def sampled_from(values) -> _Strategy:
+    seq = list(values)
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+_MAX_EXAMPLES_ATTR = "_stub_max_examples"
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples: int | None = None, deadline=None, **_kw):
+    def deco(fn):
+        if max_examples is not None:
+            setattr(fn, _MAX_EXAMPLES_ATTR, max_examples)
+        return fn
+
+    return deco
+
+
+def given(*strategies: _Strategy, **kw_strategies: _Strategy):
+    def deco(fn):
+        def wrapper():
+            n = getattr(
+                wrapper,
+                _MAX_EXAMPLES_ATTR,
+                getattr(fn, _MAX_EXAMPLES_ATTR, _DEFAULT_MAX_EXAMPLES),
+            )
+            rng = random.Random(fn.__qualname__)
+            for _ in range(n):
+                args = [s.example_from(rng) for s in strategies]
+                kwargs = {k: s.example_from(rng) for k, s in kw_strategies.items()}
+                fn(*args, **kwargs)
+
+        # NOTE: deliberately no functools.wraps — pytest must see a
+        # zero-argument signature, not the wrapped function's parameters.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.booleans = booleans
+strategies.floats = floats
+strategies.sampled_from = sampled_from

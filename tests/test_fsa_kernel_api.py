@@ -1,0 +1,156 @@
+"""FSA kernel-API coverage (paper §5): tile views, SRAM capacity
+enforcement, and eager-vs-replayed program equivalence."""
+
+import numpy as np
+import pytest
+
+import repro.core.fsa_kernel_api as F
+from repro.core.fsa_sim import FSADevice
+
+
+# -- split() views ------------------------------------------------------------
+
+def test_split_nested_views_read_and_write_through():
+    """split() of a split() stays a live view of the root tile: reads see
+    the parent's data and store_tile into the nested view lands in the
+    parent's backing array (Listing 2 writes O tiles through views)."""
+    base = np.arange(32, dtype=np.float32).reshape(4, 8)
+
+    @F.kernel()
+    def k():
+        m = F.alloc_mem((4, 8), np.float32, data=base)
+        cols = m.split(4, dim=-1)          # two [4, 4] views
+        quads = cols[1].split(2, dim=0)    # two [2, 4] views of a view
+        np.testing.assert_array_equal(quads[1].to_numpy(), base[2:4, 4:8])
+
+        a = F.alloc_accum((2, 4))
+        a._write(F._ctx().device.accum, np.full((2, 4), 7.0, np.float32))
+        F.store_tile(a, quads[1])          # write-through the nested view
+        # Sibling views and untouched rows are unchanged.
+        np.testing.assert_array_equal(cols[0].to_numpy(), base[:, :4])
+        np.testing.assert_array_equal(quads[0].to_numpy(), base[0:2, 4:8])
+        return m
+
+    out = k().output
+    expect = base.copy()
+    expect[2:4, 4:8] = 7.0
+    np.testing.assert_array_equal(out, expect)
+
+
+def test_split_requires_even_division():
+    @F.kernel()
+    def k():
+        m = F.alloc_mem((4, 6), np.float32, data=np.zeros((4, 6)))
+        with pytest.raises(AssertionError):
+            m.split(4, dim=-1)  # 6 % 4 != 0
+        return m
+
+    k()
+
+
+# -- SRAM capacity enforcement (Table 1) --------------------------------------
+
+def test_scratchpad_capacity_enforced():
+    """192 KiB scratchpad: an allocation at the limit succeeds, one element
+    more raises MemoryError (fp16 = 2 bytes/elem)."""
+    at_limit = 192 * 1024 // 2
+
+    @F.kernel()
+    def fits():
+        F.alloc_spad((at_limit,), np.float16)
+        return None
+
+    fits()  # exactly at capacity: fine
+
+    @F.kernel()
+    def overflows():
+        F.alloc_spad((at_limit,), np.float16)
+        F.alloc_spad((1,), np.float16)  # cumulative: one tile over
+        return None
+
+    with pytest.raises(MemoryError):
+        overflows()
+
+
+def test_accum_capacity_enforced():
+    """64 KiB accumulation SRAM, fp32 = 4 bytes/elem."""
+    at_limit = 64 * 1024 // 4
+
+    @F.kernel()
+    def overflows():
+        F.alloc_accum((at_limit + 1,), np.float32)
+        return None
+
+    with pytest.raises(MemoryError):
+        overflows()
+
+
+def test_main_memory_is_unbounded():
+    @F.kernel()
+    def big():
+        F.alloc_mem((1024, 1024), np.float16)  # 2 MiB >> either SRAM
+        return None
+
+    big()
+
+
+# -- eager API vs FSADevice.run on the recorded program -----------------------
+
+def _single_tile_attention(n=32):
+    """One whole-tile FlashAttention iteration (no views, so the recorded
+    program replays on a bare device)."""
+    rng = np.random.default_rng(0)
+    Q = rng.standard_normal((n, n)).astype(np.float16)
+    K = rng.standard_normal((n, n)).astype(np.float16)
+    Vt = np.ascontiguousarray(rng.standard_normal((n, n)).astype(np.float16).T)
+    scale = 1.0 / np.sqrt(n)
+
+    @F.kernel(array_n=n)
+    def attention(Qm, Km, Vtm):
+        out = F.alloc_mem((n, n), np.float32, name="out")
+        q_s = F.alloc_spad((n, n))
+        k_s = F.alloc_spad((n, n))
+        v_s = F.alloc_spad((n, n))
+        lse = F.alloc_accum((1, n))
+        o = F.alloc_accum((n, n))
+        F.load_tile(Qm, q_s)
+        F.load_stationary(q_s, transpose=True)
+        F.load_tile(Km, k_s)
+        F.attn_score(k_s, lse, scale=scale)
+        F.load_tile(Vtm, v_s)
+        F.attn_value(v_s, o)
+        F.reciprocal(lse)
+        F.attn_lse_norm(o)
+        F.store_tile(o, out)
+        return out
+
+    return attention(Q, K, Vt), n
+
+
+def test_eager_cycles_match_device_run_replay():
+    """The @kernel eager path and FSADevice.run must account identical
+    cycles for the same instruction stream (§3.5: 5N+10 inner + 2N+20
+    epilogue), and produce identical numerics."""
+    res, n = _single_tile_attention()
+    # One inner iteration + epilogue.
+    assert res.cycles == (5 * n + 10) + (2 * n + 20)
+
+    replay = FSADevice(array_n=n)
+    # alloc is not an instruction: rehydrate memory images — inputs as the
+    # eager device left them, accumulators back to their alloc-time zeros.
+    replay.main = {k: v.copy() for k, v in res.device.main.items()}
+    replay.accum = {k: np.zeros_like(v) for k, v in res.device.accum.items()}
+    replay.run(res.program)
+
+    assert replay.cycles == res.cycles
+    np.testing.assert_array_equal(replay.main["out"], res.output)
+
+
+def test_program_records_full_instruction_stream():
+    res, _ = _single_tile_attention()
+    ops = [i.op for i in res.program.instrs]
+    assert ops == [
+        "load_tile", "load_stationary", "load_tile", "attn_score",
+        "load_tile", "attn_value", "reciprocal", "attn_lse_norm",
+        "store_tile",
+    ]
