@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import decode_step, forward, init_cache
+from repro.models import decode_step, init_cache
 
 
 @dataclasses.dataclass(eq=False)
@@ -46,36 +46,21 @@ class ServeEngine:
         self.batch, self.max_len = batch_size, max_len
         self.queue: deque[Request] = deque()
         self.slots: list[Optional[Request]] = [None] * batch_size
+        # Per-run jit-invocation counters (regression-tested: prefill must
+        # cost exactly prompt_len decode steps per wave, not prompt_len
+        # steps *plus* a full batched forward).
+        self.stats = {"decode_steps": 0}
 
         self._decode = jax.jit(
             lambda p, t, c, pos: decode_step(p, cfg, t, c, pos)
-        )
-        self._prefill_logits = jax.jit(
-            lambda p, tok: forward(p, cfg, tokens=tok)
         )
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
-    def _prefill_into_cache(self, req: Request, slot: int) -> None:
-        """Prefill by teacher-forced decode (cache-correct for all families).
-
-        A production TPU deployment runs the chunked flash prefill kernel and
-        writes K/V straight into the cache; the step-wise fill here reuses
-        the (already validated) decode path for every architecture family.
-        """
-        for i, tok in enumerate(req.prompt):
-            t = jnp.full((self.batch, 1), 0, jnp.int32).at[slot, 0].set(int(tok))
-            logits, self.cache = self._decode(
-                self.params, t, self.cache, jnp.asarray(i, jnp.int32)
-            )
-        req._next = int(jnp.argmax(logits[slot, -1]))  # type: ignore[attr-defined]
-        req._pos = len(req.prompt)  # type: ignore[attr-defined]
-
     def run(self, max_steps: int = 1024) -> list[Request]:
         """Drain the queue; returns completed requests."""
         done: list[Request] = []
-        self.cache = init_cache(self.cfg, self.batch, self.max_len)
         # NOTE single shared cache across slots: per-slot positions differ,
         # so this simple engine admits one prompt length per wave.
         while (self.queue or any(self.slots)) and max_steps > 0:
@@ -90,20 +75,23 @@ class ServeEngine:
             plen = len(live[0].prompt)
             wave = [r for r in live if len(r.prompt) == plen]
 
-            # Batched prefill: one forward over the wave's prompts.
             toks = np.zeros((self.batch, plen), np.int32)
             for i, r in enumerate(self.slots):
                 if r in wave:
                     toks[i, :] = r.prompt
-            logits = self._prefill_logits(self.params, jnp.asarray(toks))
-            # Re-fill the cache step-wise (family-agnostic) while sampling
-            # the first token from the prefill logits.
+            # Teacher-forced prefill: one decode step per prompt position
+            # (family-agnostic: fills KV caches and SSM states alike).  The
+            # final step's logits *are* the prefill logits at plen-1, so the
+            # first token is sampled from them directly — the old engine
+            # additionally ran a full batched forward over the prompt and
+            # then discarded the step-wise logits, prefilling twice.
             self.cache = init_cache(self.cfg, self.batch, self.max_len)
             for pos in range(plen):
                 t = jnp.asarray(toks[:, pos : pos + 1])
-                _, self.cache = self._decode(
+                logits, self.cache = self._decode(
                     self.params, t, self.cache, jnp.asarray(pos, jnp.int32)
                 )
+                self.stats["decode_steps"] += 1
             next_tok = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1), np.int32)
 
             # Decode until every wave member finishes.
@@ -114,6 +102,7 @@ class ServeEngine:
                 logits_d, self.cache = self._decode(
                     self.params, t, self.cache, jnp.asarray(pos, jnp.int32)
                 )
+                self.stats["decode_steps"] += 1
                 for i, r in enumerate(self.slots):
                     if r in wave and not r.done:
                         tok = int(next_tok[i])

@@ -97,6 +97,20 @@ def test_serve_engine_completes_and_is_deterministic():
     assert again.output == first.output  # batching-invariant greedy decode
 
 
+def test_serve_prefill_is_single_pass():
+    """Regression for the double-prefill bug: a request with prompt length P
+    and N new tokens must cost exactly P + N decode-step jit invocations —
+    the old engine ran an additional full batched forward over the prompt
+    and re-filled the cache afterwards, prefilling twice."""
+    params = init_params(TINY, jax.random.PRNGKey(0))
+    e = ServeEngine(TINY, params, batch_size=2, max_len=32)
+    prompt = np.arange(8, dtype=np.int32)
+    e.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
+    (r,) = e.run()
+    assert len(r.output) == 4
+    assert e.stats["decode_steps"] == len(prompt) + 4
+
+
 @pytest.mark.skipif(jax.device_count() < 8, reason="needs 8 devices")
 def test_elastic_rescale_between_meshes(tmp_path):
     """Save on a 2x4 mesh, resume on 4x2 — shardings re-derived, state
