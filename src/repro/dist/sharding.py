@@ -161,10 +161,15 @@ def batch_pspec(batch: Any, mesh, cfg: Optional[ModelConfig] = None) -> Any:
 
 
 def cache_shardings(cache: Any, cfg: ModelConfig, mesh) -> Any:
-    """KV/state-cache shardings.  Stacked cache leaves are
-    [num_layers, batch, ...]: the batch dim shards over the data axes and,
-    for attention KV tensors [L, B, S, H, d], the head dim over "model"
-    (matching the column-parallel K/V projections that fill them)."""
+    """KV/state-cache shardings.  Every stacked cache leaf is
+    [num_layers, batch, ...] — batch at dim 1 (the invariant
+    ``repro.models.insert_cache`` slots into): the batch dim shards over
+    the data axes, so each continuous-batching slot lives on one DP shard
+    and slot insert/retire touches a single replica group.  Floating
+    KV/state tensors [L, B, S, H, d] additionally shard the head dim over
+    "model" (matching the column-parallel K/V projections that fill them).
+    Integer leaves — the per-slot ``lengths`` [L, B] that drive decode
+    scatter offsets and masks — only ever shard the batch dim."""
     sizes = _mesh_sizes(mesh)
     daxes = tuple(a for a in DATA_AXES if sizes.get(a, 0) > 1)
 
@@ -174,7 +179,7 @@ def cache_shardings(cache: Any, cfg: ModelConfig, mesh) -> Any:
         spec: list[Any] = [None] * rank
         if rank >= 2:
             spec[1] = _fit(daxes, shape[1], sizes)
-        if rank >= 4:
+        if rank >= 4 and jax.numpy.issubdtype(leaf.dtype, jax.numpy.floating):
             spec[rank - 2] = _fit("model", shape[rank - 2], sizes)
         return NamedSharding(mesh, P(*spec))
 

@@ -1,48 +1,108 @@
-"""Serving launcher: batched requests against a (smoke-config) model.
+"""Serving launcher: continuous batching against a (smoke-config) model.
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --requests 8
+
+Requests get mixed prompt lengths (the engine buckets them for prefill),
+arrive all at once, and drain through a fixed slot pool — so this drives
+prefill bucketing, slot eviction and back-fill even in a smoke run.
+
+  --temperature/--top-k/--top-p  sampling policy (default greedy)
+  --chunk N                      chunked flash prefill (N tokens per call)
+  --mesh DxM                     shard params + decode cache over a debug
+                                 mesh (data x model), e.g. --mesh 2x4
+  --check                        verify every greedy output token-for-token
+                                 against sequential single-request decode
 """
 
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import numpy as np
 
 from repro.configs.registry import get_smoke_config
 from repro.models import init_params
-from repro.serve.engine import Request, ServeEngine
+from repro.serve import Request, SamplingConfig, ServeEngine, sequential_greedy_decode
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-9b")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=12,
+                    help="max prompt length; actual lengths are mixed in [2, N]")
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--chunk", type=int, default=None)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default=None, help="debug mesh DxM, e.g. 2x4")
+    ap.add_argument("--check", action="store_true",
+                    help="compare against sequential single-request decode")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
     if cfg.family == "encoder":
         raise SystemExit("encoder-only arch: no decode phase (DESIGN.md §5)")
+
+    mesh = None
     params = init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServeEngine(cfg, params, batch_size=args.batch, max_len=128)
+    if args.mesh:
+        from repro.dist.sharding import param_shardings
+        from repro.launch.mesh import make_debug_mesh
+
+        data, model = (int(x) for x in args.mesh.split("x"))
+        mesh = make_debug_mesh(data, model)
+        params = jax.device_put(params, param_shardings(params, cfg, mesh))
+
+    sampling = SamplingConfig(
+        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+        seed=args.seed,
+    )
+    engine = ServeEngine(
+        cfg, params, batch_size=args.batch, max_len=args.max_len,
+        prefill_chunk=args.chunk, sampling=sampling, mesh=mesh,
+    )
 
     rng = np.random.default_rng(0)
+    prompts = {}
     for i in range(args.requests):
-        engine.submit(
-            Request(
-                rid=i,
-                prompt=rng.integers(0, cfg.vocab_size, size=args.prompt_len).astype(np.int32),
-                max_new_tokens=args.max_new,
-            )
-        )
+        plen = int(rng.integers(2, max(3, args.prompt_len + 1)))
+        prompts[i] = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
+        engine.submit(Request(rid=i, prompt=prompts[i], max_new_tokens=args.max_new))
+
+    t0 = time.perf_counter()
     done = engine.run()
+    dt = time.perf_counter() - t0
+
     for r in sorted(done, key=lambda r: r.rid):
-        print(f"req {r.rid}: -> {r.output}")
-    print(f"completed {len(done)}/{args.requests}")
+        print(f"req {r.rid}: prompt[{len(prompts[r.rid])}] -> {r.output}")
+    toks = sum(len(r.output) for r in done)
+    print(
+        f"completed {len(done)}/{args.requests}: {toks} tokens in {dt:.2f}s "
+        f"({toks / dt:.1f} tok/s) | stats {engine.stats} "
+        f"| compiles {engine.compile_counts()}"
+    )
+
+    if args.check:
+        if not sampling.greedy:
+            raise SystemExit("--check requires greedy decoding (temperature 0)")
+        bad = 0
+        for r in sorted(done, key=lambda r: r.rid):
+            ref = sequential_greedy_decode(
+                cfg, params, prompts[r.rid], args.max_new, max_len=args.max_len
+            )
+            if r.output != ref:
+                bad += 1
+                print(f"MISMATCH req {r.rid}: engine {r.output} != ref {ref}")
+        if bad:
+            raise SystemExit(f"{bad}/{len(done)} requests diverged")
+        print(f"check OK: all {len(done)} outputs match sequential decode")
 
 
 if __name__ == "__main__":

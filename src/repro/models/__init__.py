@@ -1,1 +1,10 @@
-from .model import decode_step, forward, init_cache, init_params, lm_loss, param_shapes  # noqa: F401
+from .model import (  # noqa: F401
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    insert_cache,
+    lm_loss,
+    param_shapes,
+    prefill_step,
+)

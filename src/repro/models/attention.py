@@ -28,7 +28,7 @@ from .layers import apply_mrope, apply_rope, dense_init, rms_norm
 class KVCache(NamedTuple):
     k: jax.Array  # [B, max_len, Hkv, d]
     v: jax.Array  # [B, max_len, Hkv, d]
-    length: jax.Array  # scalar int32: tokens already cached
+    lengths: jax.Array  # [B] int32: tokens cached per batch slot
 
 
 def attention_params(key, cfg: ModelConfig, dtype) -> dict:
@@ -74,6 +74,33 @@ def _project_qkv(x, params, cfg: ModelConfig, positions):
     return q, k, v
 
 
+def _impl_attention(q, k, v, cfg: ModelConfig, q_offset: int = 0) -> jax.Array:
+    """Dispatch full-sequence attention to the configured implementation.
+
+    Shared by training/prefill (``attention_forward``) and the chunked
+    flash prefill (``prefill_attention``) so both paths produce identical
+    numerics for the same (q, k, v) — the token-equivalence contract of
+    the serving engine depends on this.
+    """
+    if cfg.attention_impl == "naive":
+        return naive_attention(q, k, v, causal=cfg.causal, q_offset=q_offset)
+    if cfg.attention_impl == "pallas":
+        return flash_attention(
+            q, k, v, cfg.causal, None, q_offset,
+            cfg.attn_block_q, cfg.attn_block_k, cfg.exp2_impl, 8, "pallas",
+        )
+    # systolic (paper-faithful jnp; dry-run / CPU path)
+    return systolic_attention(
+        q, k, v,
+        causal=cfg.causal,
+        q_offset=q_offset,
+        block_q=cfg.attn_block_q,
+        block_k=cfg.attn_block_k,
+        exp2_impl=cfg.exp2_impl,
+        unroll=cfg.attn_unroll,
+    )
+
+
 def attention_forward(
     x: jax.Array,  # [B, S, d_model]
     params: dict,
@@ -83,24 +110,39 @@ def attention_forward(
     """Full-sequence attention (training / prefill)."""
     b, s, _ = x.shape
     q, k, v = _project_qkv(x, params, cfg, positions)
-    if cfg.attention_impl == "naive":
-        o = naive_attention(q, k, v, causal=cfg.causal)
-    elif cfg.attention_impl == "pallas":
-        o = flash_attention(
-            q, k, v, cfg.causal, None, 0,
-            cfg.attn_block_q, cfg.attn_block_k, cfg.exp2_impl, 8, "pallas",
-        )
-    else:  # systolic (paper-faithful jnp; dry-run / CPU path)
-        o = systolic_attention(
-            q, k, v,
-            causal=cfg.causal,
-            block_q=cfg.attn_block_q,
-            block_k=cfg.attn_block_k,
-            exp2_impl=cfg.exp2_impl,
-            unroll=cfg.attn_unroll,
-        )
+    o = _impl_attention(q, k, v, cfg)
     o = o.reshape(b, s, cfg.num_heads * cfg.resolved_head_dim)
     return o @ params["wo"]
+
+
+def prefill_attention(
+    x: jax.Array,  # [B, C, d_model] — one prefill chunk
+    params: dict,
+    cfg: ModelConfig,
+    cache: KVCache,  # seq capacity >= start + C
+    positions: jax.Array,  # [B, C] (or [B, C, 3]) absolute positions
+    start: int,  # static chunk offset: tokens [0, start) are already cached
+) -> tuple[jax.Array, KVCache]:
+    """Chunked flash prefill: write the chunk's K/V straight into the cache
+    and attend the chunk's queries over everything cached so far.
+
+    One flash-attention call per chunk (no per-token loop): causality
+    against the earlier chunks comes from ``q_offset=start``.  ``start`` is
+    a Python int (the chunk schedule is unrolled inside jit), so the K/V
+    span ``[:start+C]`` is a static slice.  ``cache.lengths`` is left for
+    the caller to set once the full prompt is in.
+    """
+    b, c, _ = x.shape
+    q, k_new, v_new = _project_qkv(x, params, cfg, positions)
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k_new.astype(cache.k.dtype), start, axis=1
+    )
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v_new.astype(cache.v.dtype), start, axis=1
+    )
+    o = _impl_attention(q, k[:, : start + c], v[:, : start + c], cfg, q_offset=start)
+    o = o.reshape(b, c, cfg.num_heads * cfg.resolved_head_dim)
+    return o @ params["wo"], KVCache(k=k, v=v, lengths=cache.lengths)
 
 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
@@ -108,7 +150,7 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
     return KVCache(
         k=jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
         v=jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
-        length=jnp.zeros((), jnp.int32),
+        lengths=jnp.zeros((batch,), jnp.int32),
     )
 
 
@@ -119,14 +161,24 @@ def decode_attention(
     cache: KVCache,
     positions: jax.Array,  # [B, 1] (or [B, 1, 3])
 ) -> tuple[jax.Array, KVCache]:
-    """Single-token decode against the KV cache (paper §8.3: never FSA)."""
+    """Single-token decode against the KV cache (paper §8.3: never FSA).
+
+    Per-slot positions: slot i's new K/V is scattered at ``lengths[i]``, so
+    requests at arbitrary decode depths share one batched step (continuous
+    batching).  Slots whose length has reached capacity drop their write.
+    """
     b = x.shape[0]
     hd = cfg.resolved_head_dim
     q, k_new, v_new = _project_qkv(x, params, cfg, positions)
 
-    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), cache.length, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), cache.length, axis=1)
-    new_cache = KVCache(k=k, v=v, length=cache.length + 1)
+    slot = jnp.arange(b)
+    k = cache.k.at[slot, cache.lengths].set(
+        k_new[:, 0].astype(cache.k.dtype), mode="drop"
+    )
+    v = cache.v.at[slot, cache.lengths].set(
+        v_new[:, 0].astype(cache.v.dtype), mode="drop"
+    )
+    new_cache = KVCache(k=k, v=v, lengths=cache.lengths + 1)
 
     # GQA via grouped einsum — materializing jnp.repeat(k, rep) would blow
     # the cache up rep x (16x for qwen3) and force GSPMD to reshard it every
@@ -135,8 +187,11 @@ def decode_attention(
     qg = q.reshape(b, 1, cfg.num_kv_heads, rep, hd).astype(jnp.float32)
     scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
     s = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k.astype(jnp.float32)) * scale
-    # Mask positions beyond the (updated) cache length.
-    valid = jnp.arange(k.shape[1])[None, None, None, None, :] <= cache.length
+    # Mask positions beyond each slot's (updated) cache length.
+    valid = (
+        jnp.arange(k.shape[1])[None, None, None, None, :]
+        <= cache.lengths[:, None, None, None, None]
+    )
     s = jnp.where(valid, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhrqk,bkhd->bqhrd", p, v.astype(jnp.float32)).astype(x.dtype)

@@ -28,6 +28,7 @@ from .attention import (
     attention_params,
     decode_attention,
     init_kv_cache,
+    prefill_attention,
 )
 from .layers import apply_norm, embed_init, mlp_forward, mlp_params, norm_params
 from .moe import moe_forward, moe_params
@@ -138,10 +139,20 @@ def _sp(x, cfg: ModelConfig):
     return constrain(x, ("pod", "data"), "model", None)
 
 
-def _transformer_block(x, layer, cfg: ModelConfig, positions):
+def _transformer_block(x, layer, cfg: ModelConfig, positions, kv=None, start=0):
+    """One transformer block.  With ``kv`` (a per-layer KVCache) the
+    attention sub-block runs the chunked-prefill path — K/V written into
+    the cache at [start, start+S) — and the updated cache is returned
+    alongside the activations; without it, plain full-sequence attention.
+    Both paths share the same MLP/norm code and attention dispatch, so
+    prefill-into-cache and training forward are numerically identical."""
     x = _sp(x, cfg)
     h = apply_norm(x, layer["attn_norm"], cfg.norm_type)
-    x = x + attention_forward(h, layer["attn"], cfg, positions)
+    if kv is None:
+        a = attention_forward(h, layer["attn"], cfg, positions)
+    else:
+        a, kv = prefill_attention(h, layer["attn"], cfg, kv, positions, start)
+    x = x + a
     x = _sp(x, cfg)
     h = apply_norm(x, layer["mlp_norm"], cfg.norm_type)
     if cfg.moe is not None:
@@ -150,7 +161,8 @@ def _transformer_block(x, layer, cfg: ModelConfig, positions):
             y = y + mlp_forward(h, layer["dense_mlp"], cfg.mlp_type)
     else:
         y = mlp_forward(h, layer["mlp"], cfg.mlp_type)
-    return _sp(x + y, cfg)
+    out = _sp(x + y, cfg)
+    return out if kv is None else (out, kv)
 
 
 def _scan_layers(x, stacked, body, remat: bool, unroll: int = 1):
@@ -267,12 +279,17 @@ def decode_step(
     cfg: ModelConfig,
     tokens: jax.Array,  # [B, 1] int32
     cache: Any,
-    position: jax.Array,  # scalar int32: absolute position of the new token
+    position: jax.Array,  # scalar or [B] int32: absolute position per slot
 ) -> tuple[jax.Array, Any]:
-    """One decode step -> (logits [B, 1, V], new cache)."""
+    """One decode step -> (logits [B, 1, V], new cache).
+
+    ``position`` may be a scalar (all slots at the same depth — the
+    static-batch path) or a per-slot ``[B]`` vector (continuous batching:
+    each slot decodes at its own depth)."""
     x = params["embed"][tokens]
     b = x.shape[0]
-    pos = jnp.broadcast_to(position.reshape(1, 1), (b, 1)).astype(jnp.int32)
+    position = jnp.asarray(position, jnp.int32)
+    pos = jnp.broadcast_to(position.reshape(-1, 1), (b, 1))
     if cfg.mrope_sections is not None:
         pos = jnp.broadcast_to(pos[..., None], (b, 1, 3))
 
@@ -363,6 +380,108 @@ def decode_step(
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = x @ head
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill (whole prompt into the cache) + slot insert
+# ---------------------------------------------------------------------------
+
+
+def _prefill_chunk(params: dict, cfg: ModelConfig, tokens_c, cache, start: int):
+    """One prefill chunk through the transformer stack: each layer writes
+    its K/V into the cache and flash-attends over [0, start+C)."""
+    x = params["embed"][tokens_c]
+    b, c = tokens_c.shape
+    positions = _default_positions(cfg, b, c, offset=start)
+
+    def body(h, inp):
+        layer, kv = inp
+        return _transformer_block(h, layer, cfg, positions, kv=kv, start=start)
+
+    x, new_cache = jax.lax.scan(
+        body, x, (params["layers"], cache), unroll=cfg.scan_unroll
+    )
+    x = apply_norm(x, params["final_norm"], cfg.norm_type)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits, new_cache
+
+
+def _prefill_by_scan(params: dict, cfg: ModelConfig, tokens, cache, lengths):
+    """Family-agnostic prefill fallback: teacher-force the prompt through
+    ``decode_step`` under one ``lax.scan`` (a single jit invocation, not an
+    O(prompt_len) Python loop).  Per-slot state updates are frozen once the
+    scan passes a slot's true length, so right-padded prompts don't pollute
+    recurrent (Mamba/xLSTM) states with pad tokens."""
+    b, s = tokens.shape
+
+    def body(c, inp):
+        tok, pos = inp
+        logits, new_c = decode_step(params, cfg, tok[:, None], c, pos)
+        keep = pos < lengths  # [B]
+
+        def sel(n, o):
+            return jnp.where(keep.reshape((1, b) + (1,) * (n.ndim - 2)), n, o)
+
+        return jax.tree.map(sel, new_c, c), logits[:, 0]
+
+    cache, logits = jax.lax.scan(
+        body, cache, (tokens.T, jnp.arange(s, dtype=jnp.int32))
+    )
+    return jnp.moveaxis(logits, 0, 1), cache
+
+
+def prefill_step(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # [B, S] int32, right-padded to the bucket length
+    cache: Any,  # from ``init_cache(cfg, B, S')`` with S' >= S
+    lengths: jax.Array,  # [B] int32: true prompt length per row
+    *,
+    chunk_size: Optional[int] = None,
+) -> tuple[jax.Array, Any]:
+    """Prefill a (padded) prompt batch into ``cache`` -> (logits [B,S,V], cache).
+
+    Attention families run the chunked flash path — ``flash_attention`` is
+    called once per chunk of ``chunk_size`` tokens (default: the whole
+    prompt in one call) and K/V are written straight into the cache, no
+    per-token loop and no second pass.  Recurrent families (hybrid/ssm)
+    teacher-force through ``decode_step`` under a single ``lax.scan``.
+    """
+    b, s = tokens.shape
+    lengths = jnp.asarray(lengths, jnp.int32).reshape(b)
+    if cfg.family in ("dense", "moe", "vlm"):
+        chunk = min(int(chunk_size), s) if chunk_size else s
+        logits = []
+        for start in range(0, s, chunk):
+            lg, cache = _prefill_chunk(
+                params, cfg, tokens[:, start : start + chunk], cache, start
+            )
+            logits.append(lg)
+        out = logits[0] if len(logits) == 1 else jnp.concatenate(logits, axis=1)
+        cache = cache._replace(
+            lengths=jnp.broadcast_to(lengths[None, :], cache.lengths.shape)
+        )
+        return out, cache
+    if cfg.family == "encoder":
+        raise ValueError("encoder archs have no decode cache to prefill")
+    return _prefill_by_scan(params, cfg, tokens, cache, lengths)
+
+
+def insert_cache(cache: Any, prefix: Any, slot: jax.Array) -> Any:
+    """Copy a prefilled cache (batch dim 1, seq capacity <= max_len) into
+    batch slot ``slot`` of a decode cache.  Family-agnostic: every stacked
+    cache leaf is [L, B, ...] with batch at dim 1 (KV tensors, per-slot
+    lengths, Mamba/xLSTM states alike), so one dynamic_update_slice per
+    leaf moves the whole request."""
+
+    def one(dst, src):
+        start = (0, slot) + (0,) * (dst.ndim - 2)
+        return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), start)
+
+    return jax.tree.map(one, cache, prefix)
 
 
 # ---------------------------------------------------------------------------

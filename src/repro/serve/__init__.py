@@ -1,1 +1,12 @@
-from .serve_step import make_decode_step, make_prefill_step  # noqa: F401
+from .engine import (  # noqa: F401
+    Request,
+    ServeEngine,
+    default_buckets,
+    sequential_greedy_decode,
+)
+from .serve_step import (  # noqa: F401
+    SamplingConfig,
+    make_decode_step,
+    make_prefill_step,
+    sample_logits,
+)

@@ -1,15 +1,29 @@
-"""Batched serving engine: continuous-batching-lite request scheduler over
-prefill + decode steps.
+"""Continuous-batching serving engine (JetStream/MaxText-style).
 
-Requests arrive with prompts of varying length; the engine right-pads into
-a fixed batch, prefills once (via the FSA/flash path — the compute-bound
-phase the paper targets), then decodes token-by-token with the KV/state
-cache, retiring requests at EOS/max_tokens and back-filling free slots from
-the queue.  All steps are jit-compiled once per (batch, max_len) bucket.
+Requests flow through three separated phases, each a reused jit executable:
+
+  * **prefill** — the whole (padded) prompt in one jit call: chunked flash
+    attention writes K/V straight into a single-request cache
+    (``repro.models.prefill_step``; the compute-bound phase the paper
+    targets), and the first token is sampled from the last true position's
+    logits.  Prompts are padded to a small set of power-of-two *buckets* so
+    the executable is compiled once per bucket, never per prompt length.
+  * **insert** — the prefilled single-request cache is copied into a free
+    batch slot of the shared decode cache (``repro.models.insert_cache``).
+  * **generate** — one batched decode step advances *every* live slot by
+    one token.  The cache keeps per-slot lengths, so requests with
+    different prompt lengths and decode depths coexist in one batch; slots
+    retire at EOS/max_tokens/capacity and are back-filled from the queue
+    every step.
+
+The engine is family-agnostic (dense/MoE/VLM use the flash prefill path;
+hybrid/SSM teacher-force under one ``lax.scan``) and optionally shards the
+decode cache over an ambient mesh via ``repro.dist.sharding``.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from collections import deque
 from typing import Optional
@@ -19,7 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import decode_step, init_cache
+from repro.models import decode_step, init_cache, insert_cache, prefill_step
+from .serve_step import SamplingConfig, make_decode_step, sample_logits
 
 
 @dataclasses.dataclass(eq=False)
@@ -36,87 +51,249 @@ class Request:
     done: bool = False
 
 
-class ServeEngine:
-    """Static-batch engine with slot back-filling (single-host)."""
+def default_buckets(max_len: int, lo: int = 16) -> tuple[int, ...]:
+    """Power-of-two prefill buckets up to (and excluding padding past)
+    ``max_len``: the largest bucket equals the cache capacity."""
+    buckets = []
+    b = lo
+    while b < max_len:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max_len)
+    return tuple(buckets)
 
-    def __init__(self, cfg: ModelConfig, params, *, batch_size: int = 4,
-                 max_len: int = 256):
+
+class ServeEngine:
+    """Continuous-batching engine with per-slot cache state."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        batch_size: int = 4,
+        max_len: int = 256,
+        prefill_chunk: Optional[int] = None,
+        prefill_buckets: Optional[tuple[int, ...]] = None,
+        sampling: Optional[SamplingConfig] = None,
+        mesh=None,
+    ):
         assert cfg.family != "encoder", "encoder archs have no decode phase"
         self.cfg, self.params = cfg, params
         self.batch, self.max_len = batch_size, max_len
+        self.prefill_chunk = prefill_chunk
+        self.sampling = sampling or SamplingConfig()
+        self.mesh = mesh
+        self.buckets = tuple(sorted(prefill_buckets or default_buckets(max_len)))
+        assert self.buckets[-1] <= max_len, "bucket exceeds cache capacity"
+
         self.queue: deque[Request] = deque()
         self.slots: list[Optional[Request]] = [None] * batch_size
-        # Per-run jit-invocation counters (regression-tested: prefill must
-        # cost exactly prompt_len decode steps per wave, not prompt_len
-        # steps *plus* a full batched forward).
-        self.stats = {"decode_steps": 0}
+        self.cache = None
+        # Host-side per-slot decode state: the position the next token will
+        # be written at (== tokens cached), and the last sampled token that
+        # the next generate step consumes.
+        self._positions = np.zeros(batch_size, np.int32)
+        self._next_tok = np.zeros(batch_size, np.int32)
+        self._done: list[Request] = []
+        self._step_idx = 0
+        self._prefill_idx = 0
+        self._base_key = jax.random.PRNGKey(self.sampling.seed)
+        self.stats = {"prefill_calls": 0, "insert_calls": 0, "decode_steps": 0}
 
-        self._decode = jax.jit(
-            lambda p, t, c, pos: decode_step(p, cfg, t, c, pos)
-        )
+        scfg = self.sampling
+
+        def _prefill(params, tokens, true_len, key):
+            # tokens [1, bucket]; a fresh single-request cache sized to the
+            # bucket (not max_len) keeps prefill memory and the insert copy
+            # proportional to the prompt, MaxText-style.
+            bucket = tokens.shape[1]
+            cache = init_cache(cfg, 1, bucket)
+            logits, cache = prefill_step(
+                params, cfg, tokens, cache,
+                jnp.reshape(true_len, (1,)),
+                chunk_size=self.prefill_chunk,
+            )
+            last = jnp.take(logits[0], true_len - 1, axis=0)  # [V]
+            return sample_logits(last, key, scfg), cache
+
+        # One jitted callable each; distinct buckets become distinct cache
+        # entries of the same executable family (``_cache_size()`` counts
+        # them — the recompile tests pin it to the bucket count).
+        def _insert(cache, prefix, slot):
+            # Closure (not `jax.jit(insert_cache)` directly): pjit caches on
+            # function identity, so jitting the shared module-level function
+            # would pool executables across engines and make per-engine
+            # compile_counts() meaningless.
+            return insert_cache(cache, prefix, slot)
+
+        self._prefill_jit = jax.jit(_prefill)
+        self._insert_jit = jax.jit(_insert)
+        self._decode_jit = jax.jit(make_decode_step(cfg, sampling=scfg))
+
+    # -- introspection ------------------------------------------------------
+
+    def compile_counts(self) -> dict:
+        """Executables compiled so far, per phase."""
+        return {
+            "prefill": self._prefill_jit._cache_size(),
+            "insert": self._insert_jit._cache_size(),
+            "generate": self._decode_jit._cache_size(),
+        }
+
+    # -- request intake -----------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        if len(req.prompt) > self.buckets[-1]:
+            raise ValueError(
+                f"prompt length {len(req.prompt)} exceeds the largest prefill "
+                f"bucket {self.buckets[-1]}"
+            )
         self.queue.append(req)
 
-    def run(self, max_steps: int = 1024) -> list[Request]:
+    def _bucket_for(self, plen: int) -> int:
+        for b in self.buckets:
+            if plen <= b:
+                return b
+        raise ValueError(plen)  # unreachable: submit() validates
+
+    # -- engine phases ------------------------------------------------------
+
+    def _mesh_ctx(self):
+        return jax.set_mesh(self.mesh) if self.mesh is not None else contextlib.nullcontext()
+
+    def _ensure_cache(self) -> None:
+        if self.cache is not None:
+            return
+        with self._mesh_ctx():
+            cache = init_cache(self.cfg, self.batch, self.max_len)
+        if self.mesh is not None:
+            from repro.dist.sharding import cache_shardings
+
+            cache = jax.device_put(
+                cache, cache_shardings(cache, self.cfg, self.mesh)
+            )
+        self.cache = cache
+
+    def _prefill_into_slot(self, req: Request, slot: int) -> int:
+        """Prefill ``req`` (one jit call) and insert it into ``slot``."""
+        plen = len(req.prompt)
+        bucket = self._bucket_for(plen)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = req.prompt
+        key = jax.random.fold_in(self._base_key, self._prefill_idx)
+        self._prefill_idx += 1
+        with self._mesh_ctx():
+            tok0, prefix = self._prefill_jit(
+                self.params, jnp.asarray(toks), jnp.asarray(plen, jnp.int32), key
+            )
+            self.cache = self._insert_jit(
+                self.cache, prefix, jnp.asarray(slot, jnp.int32)
+            )
+        self.stats["prefill_calls"] += 1
+        self.stats["insert_calls"] += 1
+        self._positions[slot] = plen
+        self._next_tok[slot] = int(tok0)
+        return int(tok0)
+
+    def _retire(self, slot: int) -> None:
+        req = self.slots[slot]
+        req.done = True
+        self._done.append(req)
+        self.slots[slot] = None
+
+    def step(self) -> bool:
+        """Back-fill free slots, then advance every live slot one token.
+
+        Returns True while work remains (live slots or queued requests).
+        """
+        self._ensure_cache()
+        # Insert phase: fill every free slot from the queue.  A request
+        # that completes at prefill (max_new_tokens == 1 or immediate EOS)
+        # retires without occupying the slot.
+        for i in range(self.batch):
+            while self.slots[i] is None and self.queue:
+                req = self.queue.popleft()
+                tok0 = self._prefill_into_slot(req, i)
+                req.output.append(tok0)
+                if tok0 == req.eos_id or req.max_new_tokens <= 1:
+                    req.done = True
+                    self._done.append(req)
+                else:
+                    self.slots[i] = req
+
+        live = [i for i in range(self.batch) if self.slots[i] is not None]
+        if not live:
+            return bool(self.queue)
+
+        # Generate phase: one batched decode step for all slots.
+        args = (
+            self.params,
+            self.cache,
+            jnp.asarray(self._next_tok[:, None]),
+            jnp.asarray(self._positions),
+        )
+        with self._mesh_ctx():
+            if self.sampling.greedy:
+                nt, _logits, self.cache = self._decode_jit(*args)
+            else:
+                key = jax.random.fold_in(self._base_key, 2**20 + self._step_idx)
+                nt, _logits, self.cache = self._decode_jit(*args, key)
+        self.stats["decode_steps"] += 1
+        self._step_idx += 1
+        nt = np.asarray(nt)[:, 0]
+
+        self._positions[live] += 1
+        for i in live:
+            req = self.slots[i]
+            tok = int(nt[i])
+            req.output.append(tok)
+            if (
+                tok == req.eos_id
+                or len(req.output) >= req.max_new_tokens
+                or self._positions[i] >= self.max_len  # cache slot exhausted
+            ):
+                self._retire(i)
+            else:
+                self._next_tok[i] = tok
+        return bool(self.queue or any(r is not None for r in self.slots))
+
+    def run(self, max_steps: int = 100_000) -> list[Request]:
         """Drain the queue; returns completed requests."""
-        done: list[Request] = []
-        # NOTE single shared cache across slots: per-slot positions differ,
-        # so this simple engine admits one prompt length per wave.
-        while (self.queue or any(self.slots)) and max_steps > 0:
-            max_steps -= 1
-            # Fill free slots (one wave shares a prompt length).
-            for i in range(self.batch):
-                if self.slots[i] is None and self.queue:
-                    self.slots[i] = self.queue.popleft()
-            live = [r for r in self.slots if r is not None]
-            if not live:
+        steps = 0
+        while steps < max_steps:
+            steps += 1
+            if not self.step():
                 break
-            plen = len(live[0].prompt)
-            wave = [r for r in live if len(r.prompt) == plen]
-
-            toks = np.zeros((self.batch, plen), np.int32)
-            for i, r in enumerate(self.slots):
-                if r in wave:
-                    toks[i, :] = r.prompt
-            # Teacher-forced prefill: one decode step per prompt position
-            # (family-agnostic: fills KV caches and SSM states alike).  The
-            # final step's logits *are* the prefill logits at plen-1, so the
-            # first token is sampled from them directly — the old engine
-            # additionally ran a full batched forward over the prompt and
-            # then discarded the step-wise logits, prefilling twice.
-            self.cache = init_cache(self.cfg, self.batch, self.max_len)
-            for pos in range(plen):
-                t = jnp.asarray(toks[:, pos : pos + 1])
-                logits, self.cache = self._decode(
-                    self.params, t, self.cache, jnp.asarray(pos, jnp.int32)
-                )
-                self.stats["decode_steps"] += 1
-            next_tok = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1), np.int32)
-
-            # Decode until every wave member finishes.
-            pos = plen
-            active = {id(r) for r in wave}
-            while active and pos < self.max_len:
-                t = jnp.asarray(next_tok[:, None])
-                logits_d, self.cache = self._decode(
-                    self.params, t, self.cache, jnp.asarray(pos, jnp.int32)
-                )
-                self.stats["decode_steps"] += 1
-                for i, r in enumerate(self.slots):
-                    if r in wave and not r.done:
-                        tok = int(next_tok[i])
-                        r.output.append(tok)
-                        if tok == r.eos_id or len(r.output) >= r.max_new_tokens:
-                            r.done = True
-                            active.discard(id(r))
-                next_tok = np.asarray(
-                    jnp.argmax(logits_d[:, -1, :], axis=-1), np.int32
-                )
-                pos += 1
-            for i, r in enumerate(self.slots):
-                if r in wave:
-                    r.done = True
-                    done.append(r)
-                    self.slots[i] = None
+        done, self._done = self._done, []
         return done
+
+
+def sequential_greedy_decode(
+    cfg: ModelConfig,
+    params,
+    prompt: np.ndarray,
+    max_new_tokens: int,
+    *,
+    eos_id: int = -1,
+    max_len: Optional[int] = None,
+) -> list[int]:
+    """Obviously-correct single-request baseline: teacher-forced per-token
+    prefill plus greedy decode, batch 1, one jit dispatch per token.  The
+    engine's token-equivalence harness checks continuous batching against
+    exactly this."""
+    plen = len(prompt)
+    max_len = max_len or plen + max_new_tokens
+    cache = init_cache(cfg, 1, max_len)
+    logits = None
+    for i in range(plen):
+        t = jnp.asarray([[int(prompt[i])]], jnp.int32)
+        logits, cache = decode_step(params, cfg, t, cache, jnp.asarray(i, jnp.int32))
+    out = [int(jnp.argmax(logits[0, -1]))]
+    pos = plen
+    while len(out) < max_new_tokens and out[-1] != eos_id and pos < max_len:
+        t = jnp.asarray([[out[-1]]], jnp.int32)
+        logits, cache = decode_step(params, cfg, t, cache, jnp.asarray(pos, jnp.int32))
+        out.append(int(jnp.argmax(logits[0, -1])))
+        pos += 1
+    return out

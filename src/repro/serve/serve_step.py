@@ -1,10 +1,12 @@
 """Serving steps: prefill (full-sequence forward) and decode (one token
-against the KV/state caches).  Per the paper §8.3 the FSA/flash path is used
-for prefill only; decode is the memory-bound einsum path.
+against the KV/state caches), plus the sampling policies the engine threads
+through both.  Per the paper §8.3 the FSA/flash path is used for prefill
+only; decode is the memory-bound einsum path.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Optional
 
 import jax
@@ -12,6 +14,51 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.model import decode_step, forward
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    """Sampling policy, applied in order: temperature -> top-k -> top-p.
+
+    ``temperature == 0`` means greedy argmax (top_k/top_p ignored); the
+    fields are static jit constants, so changing the policy recompiles the
+    decode step once rather than threading runtime branches through it.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0  # 0: no top-k truncation
+    top_p: float = 1.0  # 1.0: no nucleus truncation
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+def sample_logits(
+    logits: jax.Array,  # [..., V]
+    key: Optional[jax.Array],
+    scfg: SamplingConfig,
+) -> jax.Array:
+    """Sample token ids from logits under the configured policy."""
+    logits = logits.astype(jnp.float32)
+    if scfg.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / scfg.temperature
+    if scfg.top_k > 0:
+        kth = jax.lax.top_k(logits, scfg.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if scfg.top_p < 1.0:
+        sorted_desc = jnp.flip(jnp.sort(logits, axis=-1), axis=-1)
+        cum = jnp.cumsum(jax.nn.softmax(sorted_desc, axis=-1), axis=-1)
+        # Keep the smallest prefix whose mass reaches top_p (the argmax
+        # token always survives: its cum-prob term starts the prefix).
+        keep = cum - jax.nn.softmax(sorted_desc, axis=-1) < scfg.top_p
+        kth = jnp.min(
+            jnp.where(keep, sorted_desc, jnp.inf), axis=-1, keepdims=True
+        )
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
 
 
 def make_prefill_step(cfg: ModelConfig):
@@ -30,10 +77,25 @@ def make_prefill_step(cfg: ModelConfig):
     return prefill_step
 
 
-def make_decode_step(cfg: ModelConfig, *, greedy: bool = True):
-    def serve_step(params, cache, tokens, position):
+def make_decode_step(cfg: ModelConfig, *, sampling: Optional[SamplingConfig] = None):
+    """Decode step closure.  Greedy (``sampling`` None or temperature 0)
+    keeps the 4-arg ``(params, cache, tokens, position)`` contract the
+    launch/dry-run cells lower; a stochastic policy appends a PRNG ``key``
+    argument."""
+    scfg = sampling or SamplingConfig()
+
+    if scfg.greedy:
+
+        def serve_step(params, cache, tokens, position):
+            logits, new_cache = decode_step(params, cfg, tokens, cache, position)
+            next_tok = sample_logits(logits[:, -1, :], None, scfg)
+            return next_tok[:, None], logits, new_cache
+
+        return serve_step
+
+    def serve_step_sampled(params, cache, tokens, position, key):
         logits, new_cache = decode_step(params, cfg, tokens, cache, position)
-        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        next_tok = sample_logits(logits[:, -1, :], key, scfg)
         return next_tok[:, None], logits, new_cache
 
-    return serve_step
+    return serve_step_sampled

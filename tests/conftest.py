@@ -8,12 +8,18 @@
 2. If `hypothesis` is not installed, register the deterministic stub from
    ``_hypothesis_stub.py`` under its name so the property tests still run
    (with plain random sampling instead of real shrinking search).
+3. Provide the ``jit_recompiles`` fixture: an XLA-compilation counter the
+   serving tests use to pin "compiles once per prefill bucket, never per
+   prompt length".
 """
 
 import importlib.util
+import logging
 import os
 import sys
 from pathlib import Path
+
+import pytest
 
 if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = (
@@ -29,3 +35,35 @@ except ImportError:
     _spec.loader.exec_module(_stub)
     sys.modules["hypothesis"] = _stub
     sys.modules["hypothesis.strategies"] = _stub.strategies
+
+
+class _CompileCounter(logging.Handler):
+    """Counts XLA compilations via jax's ``jax_log_compiles`` log records
+    ("Finished XLA compilation of <name> in <t> sec"), which fire exactly
+    once per executable build — cache hits are silent."""
+
+    def __init__(self):
+        super().__init__(level=logging.DEBUG)
+        self.count = 0
+
+    def emit(self, record):
+        if "Finished XLA compilation" in record.getMessage():
+            self.count += 1
+
+    def reset(self):
+        self.count = 0
+
+
+@pytest.fixture
+def jit_recompiles():
+    import jax
+
+    handler = _CompileCounter()
+    logger = logging.getLogger("jax")
+    jax.config.update("jax_log_compiles", True)
+    logger.addHandler(handler)
+    try:
+        yield handler
+    finally:
+        logger.removeHandler(handler)
+        jax.config.update("jax_log_compiles", False)

@@ -98,17 +98,21 @@ def test_serve_engine_completes_and_is_deterministic():
 
 
 def test_serve_prefill_is_single_pass():
-    """Regression for the double-prefill bug: a request with prompt length P
-    and N new tokens must cost exactly P + N decode-step jit invocations —
-    the old engine ran an additional full batched forward over the prompt
-    and re-filled the cache afterwards, prefilling twice."""
+    """Regression for the double-prefill bug: the old engine ran a full
+    batched forward over the prompt AND then re-filled the cache token by
+    token, prefilling twice.  The continuous-batching engine must cost
+    exactly one prefill call (the whole prompt in one jit dispatch, K/V
+    written in-kernel), one cache insert, and N-1 decode steps for N new
+    tokens (the first token comes out of prefill itself)."""
     params = init_params(TINY, jax.random.PRNGKey(0))
     e = ServeEngine(TINY, params, batch_size=2, max_len=32)
     prompt = np.arange(8, dtype=np.int32)
     e.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
     (r,) = e.run()
     assert len(r.output) == 4
-    assert e.stats["decode_steps"] == len(prompt) + 4
+    assert e.stats["prefill_calls"] == 1
+    assert e.stats["insert_calls"] == 1
+    assert e.stats["decode_steps"] == 4 - 1
 
 
 @pytest.mark.skipif(jax.device_count() < 8, reason="needs 8 devices")
