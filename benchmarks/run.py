@@ -4,6 +4,11 @@ Prints ``name,us_per_call,derived`` CSV rows and asserts the paper's
 headline numbers (Fig. 11 speedups, Fig. 12 PWL errors, Table 2 accuracy
 envelope, Table 3 area overhead, §3.5 cycle counts).
 
+Also emits machine-readable ``BENCH_*.json`` files into the working
+directory (currently ``BENCH_serve.json``: continuous-batching decode
+tokens/s from ``serve_bench``) — CI uploads them as workflow artifacts so
+throughput is tracked per commit.
+
 Roofline terms per (arch x mesh) come from the compiled dry-run
 (launch/dryrun.py + launch/roofline.py), not from here — this harness is
 CPU-runnable paper-claim reproduction.
@@ -21,6 +26,7 @@ def main() -> None:
         fig11_utilization,
         fig12_pwl_error,
         section35_cycles,
+        serve_bench,
         table2_accuracy,
         table3_area,
     )
@@ -32,6 +38,7 @@ def main() -> None:
         ("table2", table2_accuracy),
         ("table3", table3_area),
         ("sec35", section35_cycles),
+        ("serve", serve_bench),
     ]
     csv_rows: list[tuple[str, float, str]] = []
     failed = []

@@ -110,6 +110,69 @@ def test_pwl_exp2_kernel_segment_counts():
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
 
 
+# -- Cross-check against jax.nn.dot_product_attention ----------------------
+#
+# ref.py shares code style (and potential blind spots) with the kernels; the
+# XLA attention is an independent oracle.  Sequence lengths are deliberately
+# not multiples of the 64-token blocks so the padded-tail masking is load-
+# bearing in every case.
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_fwd_matches_jax_nn(causal, dtype):
+    b, s, h, hkv, d = 2, 100, 4, 2, 32  # GQA, ragged vs block_q/block_k=64
+    q = _rand((b, s, h, d), 0, dtype)
+    k = _rand((b, s, hkv, d), 1, dtype)
+    v = _rand((b, s, hkv, d), 2, dtype)
+    out = flash_attention_fwd(
+        q, k, v, causal=causal, block_q=64, block_k=64, interpret=True
+    )
+    ref = jax.nn.dot_product_attention(q, k, v, is_causal=causal)
+    tol = 3e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol
+    )
+
+
+@pytest.mark.parametrize("causal", [False, True])
+def test_flash_bwd_matches_jax_nn_autodiff(causal):
+    b, s, h, hkv, d = 1, 100, 2, 1, 32
+    q = _rand((b, s, h, d), 0)
+    k = _rand((b, s, hkv, d), 1)
+    v = _rand((b, s, hkv, d), 2)
+    do = _rand((b, s, h, d), 3)
+
+    def f_kernel(q, k, v):
+        o = flash_attention(q, k, v, causal, None, 0, 64, 64, "exact", 8,
+                            "pallas", True)
+        return (o * do).sum()
+
+    def f_xla(q, k, v):
+        return (jax.nn.dot_product_attention(q, k, v, is_causal=causal) * do).sum()
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_xla, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=5e-5)
+
+
+def test_flash_fwd_bf16_ragged_gqa_vs_ref():
+    """bf16 + ragged Sq != Sk + causal offset in one case (the decode-cache
+    prefill shape class the serving engine emits)."""
+    q = _rand((1, 100, 4, 32), 0, jnp.bfloat16)
+    k = _rand((1, 200, 2, 32), 1, jnp.bfloat16)
+    v = _rand((1, 200, 2, 32), 2, jnp.bfloat16)
+    out = flash_attention_fwd(
+        q, k, v, causal=True, q_offset=100, block_q=64, block_k=64, interpret=True
+    )
+    ref = attention_reference(q, k, v, causal=True, q_offset=100)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=2e-2
+    )
+
+
 # -- Pallas backward kernels (FlashAttention-2 dq / dkv) -------------------
 
 from repro.kernels.flash_attention.kernel_bwd import flash_attention_bwd  # noqa: E402

@@ -69,3 +69,53 @@ def test_vectorized_shapes_dtypes():
         x = -jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (7, 13), jnp.float32)) * 5
         out = pwl_exp2(x.astype(dtype))
         assert out.shape == x.shape and out.dtype == dtype
+
+
+# -- Pallas kernel properties (interpret mode) -----------------------------
+#
+# Same claims, checked against the *kernel* (repro.kernels.pwl_exp2) rather
+# than the jnp reference: hardware-faithful chord interpolation must stay
+# monotone, hit the segment knots exactly, and keep the Fig. 12 relative
+# error envelope.
+
+from repro.kernels.pwl_exp2.kernel import pwl_exp2_pallas  # noqa: E402
+
+
+def _kernel(x, num_segments=8):
+    return pwl_exp2_pallas(jnp.asarray(x, jnp.float32), num_segments=num_segments,
+                           interpret=True)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.floats(min_value=-30.0, max_value=0.0, allow_nan=False),
+    st.floats(min_value=0.0, max_value=30.0, allow_nan=False),
+    st.sampled_from([4, 8, 16]),
+)
+def test_kernel_monotone_nondecreasing(x, delta, k):
+    """Property: exp2 is increasing, and each PWL chord has positive slope —
+    so the kernel must be monotone for any x <= x + delta."""
+    lo, hi = _kernel([x], k), _kernel([min(x + delta, 0.0)], k)
+    assert float(lo[0]) <= float(hi[0]) + 1e-7
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=29), st.sampled_from([4, 8, 16]))
+def test_kernel_exact_at_knots(n, k):
+    """Property: chord interpolation is exact wherever the fractional part
+    lands on a segment breakpoint i/k (and at every integer, i == 0)."""
+    for i in range(k + 1):
+        x = -(n + i / k)
+        got = float(_kernel([x], k)[0])
+        want = float(np.exp2(np.float64(x)))
+        assert got == pytest.approx(want, rel=1e-6)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(min_value=-30.0, max_value=0.0, allow_nan=False))
+def test_kernel_max_rel_error_within_fig12(x):
+    """Property: at 8 segments every input respects the Fig. 12 max
+    relative error (MRE 0.02728; small slack for fp32 arithmetic)."""
+    approx = float(_kernel([x])[0])
+    exact = float(np.exp2(np.float64(x)))
+    assert abs(approx - exact) <= 0.0285 * exact + 1e-30
