@@ -1,0 +1,98 @@
+"""Flash attention throughput: fwd/bwd FLOPs/s vs the references.
+
+Times the scan-based SystolicAttention (``flash_attention(impl='jnp')`` —
+the algorithm the Pallas kernels realize, lowered for whatever backend runs
+this) against the materialized-softmax reference and
+``jax.nn.dot_product_attention`` across a few causal shapes, forward and
+forward+backward.  Emits ``BENCH_flash.json`` so CI archives attention
+throughput per commit alongside the serving numbers.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import attention_reference, flash_attention
+
+# (batch, seq, heads, head_dim) — causal self-attention shapes.
+SHAPES = [
+    (1, 256, 8, 64),
+    (1, 512, 8, 64),
+    (2, 512, 4, 32),
+]
+WARMUP = 2
+REPS = 5
+
+
+def _attn_flops(b: int, s: int, h: int, d: int, causal: bool = True) -> float:
+    """Matmul FLOPs of one attention forward: QK^T + PV, causal halves it."""
+    full = 2 * (2 * b * h * s * s * d)
+    return full / 2 if causal else full
+
+
+def _time(fn, *args) -> float:
+    for _ in range(WARMUP):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / REPS
+
+
+def _impls(b, s, h, d):
+    def flash_fwd(q, k, v):
+        return flash_attention(q, k, v, True)
+
+    def ref_fwd(q, k, v):
+        return attention_reference(q, k, v, causal=True)
+
+    def xla_fwd(q, k, v):
+        # jax.nn.dot_product_attention wants [B, S, H, d] — same layout.
+        return jax.nn.dot_product_attention(q, k, v, is_causal=True)
+
+    return {"flash": flash_fwd, "ref": ref_fwd, "xla": xla_fwd}
+
+
+def run(csv_rows: list) -> dict:
+    results = []
+    for b, s, h, d in SHAPES:
+        keys = jax.random.split(jax.random.PRNGKey(0), 3)
+        q, k, v = (
+            jax.random.normal(kk, (b, s, h, d), jnp.float32) for kk in keys
+        )
+        flops_fwd = _attn_flops(b, s, h, d)
+        shape_res = {"shape": {"batch": b, "seq": s, "heads": h, "head_dim": d}}
+        for name, fn in _impls(b, s, h, d).items():
+            fwd = jax.jit(fn)
+            dt_fwd = _time(fwd, q, k, v)
+
+            def loss(q, k, v, fn=fn):
+                return jnp.sum(fn(q, k, v))
+
+            bwd = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
+            dt_bwd = _time(bwd, q, k, v)
+            # fwd+bwd ~ 3.5x fwd matmul FLOPs (recompute + dq/dk/dv).
+            shape_res[name] = {
+                "fwd_us": round(dt_fwd * 1e6, 1),
+                "fwd_gflops_s": round(flops_fwd / dt_fwd / 1e9, 2),
+                "bwd_us": round(dt_bwd * 1e6, 1),
+                "bwd_gflops_s": round(3.5 * flops_fwd / dt_bwd / 1e9, 2),
+            }
+        results.append(shape_res)
+        csv_rows.append((
+            f"flash_fwd_b{b}s{s}h{h}d{d}",
+            shape_res["flash"]["fwd_us"],
+            f"gflops_s={shape_res['flash']['fwd_gflops_s']};"
+            f"ref_gflops_s={shape_res['ref']['fwd_gflops_s']};"
+            f"xla_gflops_s={shape_res['xla']['fwd_gflops_s']}",
+        ))
+
+    out = {"benchmark": "flash_attention", "impl": "jnp", "shapes": results}
+    with open("BENCH_flash.json", "w") as f:
+        json.dump(out, f, indent=2)
+    return out

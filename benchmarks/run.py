@@ -5,9 +5,11 @@ headline numbers (Fig. 11 speedups, Fig. 12 PWL errors, Table 2 accuracy
 envelope, Table 3 area overhead, §3.5 cycle counts).
 
 Also emits machine-readable ``BENCH_*.json`` files into the working
-directory (currently ``BENCH_serve.json``: continuous-batching decode
-tokens/s from ``serve_bench``) — CI uploads them as workflow artifacts so
-throughput is tracked per commit.
+directory — ``BENCH_serve.json`` (continuous-batching decode tokens/s),
+``BENCH_flash.json`` (flash attention fwd/bwd FLOPs/s vs references) and
+``BENCH_quant.json`` (int8 decode throughput, KV-cache footprint and
+greedy fidelity) — CI uploads them as workflow artifacts so throughput is
+tracked per commit.
 
 Roofline terms per (arch x mesh) come from the compiled dry-run
 (launch/dryrun.py + launch/roofline.py), not from here — this harness is
@@ -25,6 +27,8 @@ def main() -> None:
         fig1_active_time,
         fig11_utilization,
         fig12_pwl_error,
+        flash_bench,
+        quant_bench,
         section35_cycles,
         serve_bench,
         table2_accuracy,
@@ -39,6 +43,8 @@ def main() -> None:
         ("table3", table3_area),
         ("sec35", section35_cycles),
         ("serve", serve_bench),
+        ("flash", flash_bench),
+        ("quant", quant_bench),
     ]
     csv_rows: list[tuple[str, float, str]] = []
     failed = []

@@ -7,6 +7,8 @@ from typing import Optional
 
 import jax.numpy as jnp
 
+from repro.quant.config import QuantConfig
+
 
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
@@ -67,6 +69,10 @@ class ModelConfig:
     attn_block_k: int = 128
     dtype: str = "bfloat16"
     remat: bool = True
+    # int8 quantization policy (repro.quant): which layer classes run
+    # integer-domain matmuls and whether the KV cache stores int8.  None
+    # means fully full-precision (the default everywhere).
+    quant: Optional[QuantConfig] = None
     # Dry-run knobs: XLA's cost_analysis counts while-loop bodies once, so
     # the roofline harness unrolls the attention KV scans fully
     # (attn_unroll) and compiles the layer scan at unroll=1 and unroll=2 to

@@ -4,6 +4,9 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
+from typing import Union
+
+from repro.quant.config import QuantConfig, parse_quant
 
 from .base import SHAPES, ModelConfig, ShapeConfig
 
@@ -34,14 +37,29 @@ _MODULES = {
 }
 
 
-def get_config(arch: str) -> ModelConfig:
-    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
-    return mod.CONFIG
+def _with_quant(
+    cfg: ModelConfig, quant: Union[QuantConfig, str, None]
+) -> ModelConfig:
+    """Overlay a quantization policy (a QuantConfig or a --quant flag)."""
+    if quant is None:
+        return cfg
+    if isinstance(quant, str):
+        quant = parse_quant(quant)
+    return dataclasses.replace(cfg, quant=quant)
 
 
-def get_smoke_config(arch: str) -> ModelConfig:
+def get_config(
+    arch: str, quant: Union[QuantConfig, str, None] = None
+) -> ModelConfig:
     mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
-    return mod.SMOKE_CONFIG
+    return _with_quant(mod.CONFIG, quant)
+
+
+def get_smoke_config(
+    arch: str, quant: Union[QuantConfig, str, None] = None
+) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return _with_quant(mod.SMOKE_CONFIG, quant)
 
 
 def runnable_cells() -> list[tuple[str, str]]:

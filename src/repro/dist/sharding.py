@@ -169,18 +169,43 @@ def cache_shardings(cache: Any, cfg: ModelConfig, mesh) -> Any:
     KV/state tensors [L, B, S, H, d] additionally shard the head dim over
     "model" (matching the column-parallel K/V projections that fill them).
     Integer leaves — the per-slot ``lengths`` [L, B] that drive decode
-    scatter offsets and masks — only ever shard the batch dim."""
+    scatter offsets and masks — only ever shard the batch dim.
+
+    int8 KV caches need their own rule: the payloads are integer (the
+    floating check above would leave them replicated) and the per-token
+    scales [L, B, S, Hkv] would have their *sequence* dim matched by the
+    generic rank-2-from-the-end rule.  Both shard the head dim (3) over
+    "model", keeping payload and scale coscharded with the column-parallel
+    K/V projections that fill them."""
+    from repro.models.attention import QuantKVCache  # lazy: models import dist
+
     sizes = _mesh_sizes(mesh)
     daxes = tuple(a for a in DATA_AXES if sizes.get(a, 0) > 1)
 
-    def one(leaf):
-        shape = tuple(leaf.shape)
+    def spec_for(shape, model_dim=None):
         rank = len(shape)
         spec: list[Any] = [None] * rank
         if rank >= 2:
             spec[1] = _fit(daxes, shape[1], sizes)
-        if rank >= 4 and jax.numpy.issubdtype(leaf.dtype, jax.numpy.floating):
-            spec[rank - 2] = _fit("model", shape[rank - 2], sizes)
+        if model_dim is not None and rank > model_dim:
+            spec[model_dim] = _fit("model", shape[model_dim], sizes)
         return NamedSharding(mesh, P(*spec))
 
-    return jax.tree.map(one, cache)
+    def one(leaf):
+        shape = tuple(leaf.shape)
+        rank = len(shape)
+        floating = jax.numpy.issubdtype(leaf.dtype, jax.numpy.floating)
+        return spec_for(shape, rank - 2 if rank >= 4 and floating else None)
+
+    def node(x):
+        if isinstance(x, QuantKVCache):
+            return QuantKVCache(
+                k=spec_for(tuple(x.k.shape), 3),
+                v=spec_for(tuple(x.v.shape), 3),
+                k_scale=spec_for(tuple(x.k_scale.shape), 3),
+                v_scale=spec_for(tuple(x.v_scale.shape), 3),
+                lengths=spec_for(tuple(x.lengths.shape)),
+            )
+        return jax.tree.map(one, x)
+
+    return jax.tree.map(node, cache, is_leaf=lambda x: isinstance(x, QuantKVCache))

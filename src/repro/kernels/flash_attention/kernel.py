@@ -33,31 +33,28 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.pwl_exp2 import LOG2_E, segment_table
+from repro.core.pwl_exp2 import LOG2_E, packed_coeff_table, pwl_coeffs
 
 NEG_INF = -1e30
 DEFAULT_BLOCK_Q = 128
 DEFAULT_BLOCK_K = 128
 
 
-def _exp2_inline(x: jax.Array, exp2_impl: str, num_segments: int) -> jax.Array:
+def _exp2_inline(
+    x: jax.Array, exp2_impl: str, num_segments: int, tables=None
+) -> jax.Array:
     """exp2 on a VMEM-resident fp32 tile; 'pwl' follows §3.3 bit-for-bit."""
     if exp2_impl == "exact":
         return jnp.exp2(x)
-    slope_t, intercept_t = segment_table(num_segments)
     x_i = jnp.ceil(x)
     x_f = x - x_i
     idx = jnp.clip(
         jnp.floor((x_f + 1.0) * num_segments).astype(jnp.int32), 0, num_segments - 1
     )
-    # Unrolled segment select with *scalar* constants (no captured arrays in
-    # the kernel body — mirrors the hardware streaming slope/intercept in).
-    slope = jnp.full_like(x, float(slope_t[0]))
-    intercept = jnp.full_like(x, float(intercept_t[0]))
-    for seg in range(1, num_segments):
-        sel = idx == seg
-        slope = jnp.where(sel, float(slope_t[seg]), slope)
-        intercept = jnp.where(sel, float(intercept_t[seg]), intercept)
+    # Vectorized one-hot segment select (bit-identical to an unrolled
+    # where-chain) — one compare + two MAC reductions on the VPU; mirrors
+    # the hardware streaming slope/intercept into the PE rows.
+    slope, intercept = pwl_coeffs(idx, num_segments, tables)
     frac = slope * x_f + intercept  # the PE-MAC step
     e = jnp.clip(x_i, -150.0, 127.0).astype(jnp.int32)
     out = jnp.ldexp(frac, e)
@@ -68,9 +65,7 @@ def _fwd_kernel(
     q_ref,  # [1, block_q, d]
     k_ref,  # [1, block_k, d]
     v_ref,  # [1, block_k, d]
-    o_ref,  # [1, block_q, d]
-    *maybe_lse_and_scratch,  # optional lse_ref [1, block_q], then scratch
-    
+    *refs,  # [coeff_ref [2, lanes] if pwl], o_ref, [lse_ref], scratch
     num_k_blocks: int,
     block_q: int,
     block_k: int,
@@ -82,10 +77,17 @@ def _fwd_kernel(
     seq_k: int,
     with_lse: bool,
 ):
+    tables = None
+    if exp2_impl == "pwl":
+        coeff_ref, *refs = refs
+        tables = (
+            coeff_ref[0, :num_segments],
+            coeff_ref[1, :num_segments],
+        )
     if with_lse:
-        lse_ref, m_scr, l_scr, acc_scr = maybe_lse_and_scratch
+        o_ref, lse_ref, m_scr, l_scr, acc_scr = refs
     else:
-        m_scr, l_scr, acc_scr = maybe_lse_and_scratch
+        o_ref, m_scr, l_scr, acc_scr = refs
         lse_ref = None
     j = pl.program_id(2)
     i = pl.program_id(1)
@@ -120,8 +122,8 @@ def _fwd_kernel(
     old_m = m_scr[...]
     local_m = jnp.max(s, axis=-1)
     new_m = jnp.maximum(local_m, old_m)                      # line 8
-    b = _exp2_inline(c * (old_m - new_m), exp2_impl, num_segments)  # line 10
-    p = _exp2_inline(c * (s - new_m[:, None]), exp2_impl, num_segments)  # line 12
+    b = _exp2_inline(c * (old_m - new_m), exp2_impl, num_segments, tables)  # line 10
+    p = _exp2_inline(c * (s - new_m[:, None]), exp2_impl, num_segments, tables)  # line 12
     l_scr[...] = l_scr[...] * b + jnp.sum(p, axis=-1)        # lines 13-14
     v = v_ref[0].astype(jnp.float32)
     local_o = jax.lax.dot_general(
@@ -196,15 +198,26 @@ def flash_attention_fwd(
         seq_k=sk,
     )
 
+    in_specs = [
+        pl.BlockSpec((1, block_q, d), lambda bh, i, j: (bh, i, 0)),
+        # GQA: map q-head bh -> kv-head bh // rep without materializing.
+        pl.BlockSpec((1, block_k, d), lambda bh, i, j, rep=rep: (bh // rep, j, 0)),
+        pl.BlockSpec((1, block_k, d), lambda bh, i, j, rep=rep: (bh // rep, j, 0)),
+    ]
+    operands = [qh, kh, vh]
+    if exp2_impl == "pwl":
+        # PWL slope/intercept table as a (replicated, lane-aligned) operand:
+        # Pallas kernels reject captured constant arrays.
+        coeffs = jnp.asarray(packed_coeff_table(num_segments))
+        in_specs.append(
+            pl.BlockSpec(coeffs.shape, lambda bh, i, j: (0, 0))
+        )
+        operands.append(coeffs)
+
     out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_q, d), lambda bh, i, j: (bh, i, 0)),
-            # GQA: map q-head bh -> kv-head bh // rep without materializing.
-            pl.BlockSpec((1, block_k, d), lambda bh, i, j, rep=rep: (bh // rep, j, 0)),
-            pl.BlockSpec((1, block_k, d), lambda bh, i, j, rep=rep: (bh // rep, j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=(
             [
                 pl.BlockSpec((1, block_q, d), lambda bh, i, j: (bh, i, 0)),
@@ -227,7 +240,7 @@ def flash_attention_fwd(
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
         interpret=interpret,
-    )(qh, kh, vh)
+    )(*operands)
 
     if return_lse:
         out, lse = out

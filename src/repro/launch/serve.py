@@ -10,6 +10,10 @@ prefill bucketing, slot eviction and back-fill even in a smoke run.
   --chunk N                      chunked flash prefill (N tokens per call)
   --mesh DxM                     shard params + decode cache over a debug
                                  mesh (data x model), e.g. --mesh 2x4
+  --quant int8                   int8 projections + int8 KV cache
+                                 (repro.quant; greedy outputs stay
+                                 token-identical to sequential decode,
+                                 so --check still applies)
   --check                        verify every greedy output token-for-token
                                  against sequential single-request decode
 """
@@ -24,12 +28,16 @@ import numpy as np
 
 from repro.configs.registry import get_smoke_config
 from repro.models import init_params
+from repro.quant.config import QUANT_FLAGS
 from repro.serve import Request, SamplingConfig, ServeEngine, sequential_greedy_decode
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--quant", default="none", choices=QUANT_FLAGS,
+                    help="int8 policy: projections + int8 KV cache "
+                         "(int8-kv-only / int8-no-kv select one half)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=12,
                     help="max prompt length; actual lengths are mixed in [2, N]")
@@ -46,7 +54,7 @@ def main() -> None:
                     help="compare against sequential single-request decode")
     args = ap.parse_args()
 
-    cfg = get_smoke_config(args.arch)
+    cfg = get_smoke_config(args.arch, args.quant)
     if cfg.family == "encoder":
         raise SystemExit("encoder-only arch: no decode phase (DESIGN.md §5)")
 

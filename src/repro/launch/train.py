@@ -5,8 +5,13 @@
 
 ``--smoke`` uses the arch's reduced config (CPU-runnable); the full config
 is what the multi-pod dry-run lowers.  On a real TPU slice this same entry
-point runs under the production mesh (--mesh pod|multipod) with the
-sharding rules from repro.dist.sharding.
+point runs under the production mesh with the sharding rules from
+repro.dist.sharding; ``--mesh DxM`` stands one up from the local devices.
+
+  --quant int8         int8 projections (quantization-aware: the backward
+                       is straight-through against fp operands)
+  --compress-grads     int8 DP gradient reduction with error feedback
+  --mesh DxM           debug mesh (data x model), e.g. --mesh 2x1
 """
 
 from __future__ import annotations
@@ -16,6 +21,7 @@ import dataclasses
 
 from repro.configs.base import ShapeConfig
 from repro.configs.registry import get_config, get_smoke_config
+from repro.quant.config import QUANT_FLAGS
 from repro.train.trainer import Trainer, TrainerConfig
 
 
@@ -32,9 +38,13 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--token-file", default=None)
+    ap.add_argument("--quant", default="none", choices=QUANT_FLAGS)
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="int8-compressed DP gradient reduction")
+    ap.add_argument("--mesh", default=None, help="debug mesh DxM, e.g. 2x1")
     args = ap.parse_args()
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch, args.quant)
     if cfg.family == "encoder" and not cfg.embedding_inputs:
         raise SystemExit("encoder archs train on frame embeddings")
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
@@ -46,8 +56,15 @@ def main() -> None:
         peak_lr=args.lr,
         num_microbatches=args.microbatches,
         log_every=max(args.steps // 10, 1),
+        compress_grads=args.compress_grads,
     )
-    trainer = Trainer(cfg, shape, tcfg, token_file=args.token_file)
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_debug_mesh
+
+        data, model = (int(x) for x in args.mesh.split("x"))
+        mesh = make_debug_mesh(data, model)
+    trainer = Trainer(cfg, shape, tcfg, token_file=args.token_file, mesh=mesh)
     state = trainer.run()
     print(f"done at step {state['step']}; "
           f"loss {state['losses'][0]:.4f} -> {state['losses'][-1]:.4f}")

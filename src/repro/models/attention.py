@@ -22,12 +22,29 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.attention import naive_attention, systolic_attention
 from repro.kernels.flash_attention.ops import flash_attention
+from repro.quant import dequantize_kv, get_quant, quantize_kv
 from .layers import apply_mrope, apply_rope, dense_init, rms_norm
 
 
 class KVCache(NamedTuple):
     k: jax.Array  # [B, max_len, Hkv, d]
     v: jax.Array  # [B, max_len, Hkv, d]
+    lengths: jax.Array  # [B] int32: tokens cached per batch slot
+
+
+class QuantKVCache(NamedTuple):
+    """int8 KV storage (repro.quant): payloads + per-token/head scales.
+
+    Field order keeps ``lengths`` last and batch at dim 0 of every array
+    leaf, preserving the ``insert_cache`` / ``cache_shardings`` invariants
+    of the float cache.  Scales are fp32 [B, max_len, Hkv] — 4 bytes per
+    cached vector next to ``head_dim`` int8 payload bytes.
+    """
+
+    k: jax.Array  # int8 [B, max_len, Hkv, d]
+    v: jax.Array  # int8 [B, max_len, Hkv, d]
+    k_scale: jax.Array  # f32 [B, max_len, Hkv]
+    v_scale: jax.Array  # f32 [B, max_len, Hkv]
     lengths: jax.Array  # [B] int32: tokens cached per batch slot
 
 
@@ -54,9 +71,10 @@ def attention_params(key, cfg: ModelConfig, dtype) -> dict:
 def _project_qkv(x, params, cfg: ModelConfig, positions):
     b, s, _ = x.shape
     hd = cfg.resolved_head_dim
-    q = x @ params["wq"]
-    k = x @ params["wk"]
-    v = x @ params["wv"]
+    quant = get_quant(cfg)
+    q = quant.dot(x, params["wq"], "attention")
+    k = quant.dot(x, params["wk"], "attention")
+    v = quant.dot(x, params["wv"], "attention")
     if cfg.qkv_bias:
         q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
     q = q.reshape(b, s, cfg.num_heads, hd)
@@ -112,7 +130,7 @@ def attention_forward(
     q, k, v = _project_qkv(x, params, cfg, positions)
     o = _impl_attention(q, k, v, cfg)
     o = o.reshape(b, s, cfg.num_heads * cfg.resolved_head_dim)
-    return o @ params["wo"]
+    return get_quant(cfg).dot(o, params["wo"], "attention")
 
 
 def prefill_attention(
@@ -134,22 +152,53 @@ def prefill_attention(
     """
     b, c, _ = x.shape
     q, k_new, v_new = _project_qkv(x, params, cfg, positions)
-    k = jax.lax.dynamic_update_slice_in_dim(
-        cache.k, k_new.astype(cache.k.dtype), start, axis=1
-    )
-    v = jax.lax.dynamic_update_slice_in_dim(
-        cache.v, v_new.astype(cache.v.dtype), start, axis=1
-    )
-    o = _impl_attention(q, k[:, : start + c], v[:, : start + c], cfg, q_offset=start)
+    if get_quant(cfg).quantized_kv:
+        # Quantize on insert: each token/head vector gets its own scale, so
+        # the chunk write is byte-identical to what a per-token decode
+        # scatter-write would have produced.
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        dus = jax.lax.dynamic_update_slice_in_dim
+        new_cache = QuantKVCache(
+            k=dus(cache.k, kq, start, axis=1),
+            v=dus(cache.v, vq, start, axis=1),
+            k_scale=dus(cache.k_scale, ks, start, axis=1),
+            v_scale=dus(cache.v_scale, vs, start, axis=1),
+            lengths=cache.lengths,
+        )
+        span = slice(None, start + c)
+        k = dequantize_kv(new_cache.k[:, span], new_cache.k_scale[:, span], x.dtype)
+        v = dequantize_kv(new_cache.v[:, span], new_cache.v_scale[:, span], x.dtype)
+        o = _impl_attention(q, k, v, cfg, q_offset=start)
+    else:
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k_new.astype(cache.k.dtype), start, axis=1
+        )
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v_new.astype(cache.v.dtype), start, axis=1
+        )
+        new_cache = KVCache(k=k, v=v, lengths=cache.lengths)
+        o = _impl_attention(
+            q, k[:, : start + c], v[:, : start + c], cfg, q_offset=start
+        )
     o = o.reshape(b, c, cfg.num_heads * cfg.resolved_head_dim)
-    return o @ params["wo"], KVCache(k=k, v=v, lengths=cache.lengths)
+    return get_quant(cfg).dot(o, params["wo"], "attention"), new_cache
 
 
-def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
     hd = cfg.resolved_head_dim
+    hkv = cfg.num_kv_heads
+    if get_quant(cfg).quantized_kv:
+        return QuantKVCache(
+            k=jnp.zeros((batch, max_len, hkv, hd), jnp.int8),
+            v=jnp.zeros((batch, max_len, hkv, hd), jnp.int8),
+            k_scale=jnp.zeros((batch, max_len, hkv), jnp.float32),
+            v_scale=jnp.zeros((batch, max_len, hkv), jnp.float32),
+            lengths=jnp.zeros((batch,), jnp.int32),
+        )
     return KVCache(
-        k=jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
-        v=jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+        k=jnp.zeros((batch, max_len, hkv, hd), dtype),
+        v=jnp.zeros((batch, max_len, hkv, hd), dtype),
         lengths=jnp.zeros((batch,), jnp.int32),
     )
 
@@ -172,13 +221,28 @@ def decode_attention(
     q, k_new, v_new = _project_qkv(x, params, cfg, positions)
 
     slot = jnp.arange(b)
-    k = cache.k.at[slot, cache.lengths].set(
-        k_new[:, 0].astype(cache.k.dtype), mode="drop"
-    )
-    v = cache.v.at[slot, cache.lengths].set(
-        v_new[:, 0].astype(cache.v.dtype), mode="drop"
-    )
-    new_cache = KVCache(k=k, v=v, lengths=cache.lengths + 1)
+    if get_quant(cfg).quantized_kv:
+        # Quantize on the decode scatter-write; attention below runs over
+        # the dequantized cache (identical values to the prefill path).
+        kq, ks = quantize_kv(k_new[:, 0])
+        vq, vs = quantize_kv(v_new[:, 0])
+        new_cache = QuantKVCache(
+            k=cache.k.at[slot, cache.lengths].set(kq, mode="drop"),
+            v=cache.v.at[slot, cache.lengths].set(vq, mode="drop"),
+            k_scale=cache.k_scale.at[slot, cache.lengths].set(ks, mode="drop"),
+            v_scale=cache.v_scale.at[slot, cache.lengths].set(vs, mode="drop"),
+            lengths=cache.lengths + 1,
+        )
+        k = dequantize_kv(new_cache.k, new_cache.k_scale)
+        v = dequantize_kv(new_cache.v, new_cache.v_scale)
+    else:
+        k = cache.k.at[slot, cache.lengths].set(
+            k_new[:, 0].astype(cache.k.dtype), mode="drop"
+        )
+        v = cache.v.at[slot, cache.lengths].set(
+            v_new[:, 0].astype(cache.v.dtype), mode="drop"
+        )
+        new_cache = KVCache(k=k, v=v, lengths=cache.lengths + 1)
 
     # GQA via grouped einsum — materializing jnp.repeat(k, rep) would blow
     # the cache up rep x (16x for qwen3) and force GSPMD to reshard it every
@@ -196,4 +260,4 @@ def decode_attention(
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhrqk,bkhd->bqhrd", p, v.astype(jnp.float32)).astype(x.dtype)
     o = o.reshape(b, 1, cfg.num_heads * hd)
-    return o @ params["wo"], new_cache
+    return get_quant(cfg).dot(o, params["wo"], "attention"), new_cache

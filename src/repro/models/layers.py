@@ -8,6 +8,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.quant import Quant
+
+_FP = Quant()  # no-op policy for call sites without a config
+
 
 # -- initializers ---------------------------------------------------------------
 
@@ -132,13 +136,16 @@ def mlp_params(key, d: int, d_ff: int, mlp_type: str, dtype) -> dict:
     }
 
 
-def mlp_forward(x: jax.Array, params: dict, mlp_type: str) -> jax.Array:
+def mlp_forward(
+    x: jax.Array, params: dict, mlp_type: str, quant: Quant = _FP
+) -> jax.Array:
+    dot = lambda a, w: quant.dot(a, w, "mlp")  # noqa: E731
     if mlp_type == "swiglu":
-        h = jax.nn.silu(x @ params["gate"]) * (x @ params["up"])
+        h = jax.nn.silu(dot(x, params["gate"])) * dot(x, params["up"])
     elif mlp_type == "squared_relu":  # nemotron-4
-        h = jnp.square(jax.nn.relu(x @ params["up"]))
+        h = jnp.square(jax.nn.relu(dot(x, params["up"])))
     elif mlp_type == "gelu":
-        h = jax.nn.gelu(x @ params["up"])
+        h = jax.nn.gelu(dot(x, params["up"]))
     else:
         raise ValueError(mlp_type)
-    return h @ params["down"]
+    return dot(h, params["down"])

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.dist.collectives import constrain
+from repro.quant import get_quant
 from .attention import (
     KVCache,
     attention_forward,
@@ -155,12 +156,13 @@ def _transformer_block(x, layer, cfg: ModelConfig, positions, kv=None, start=0):
     x = x + a
     x = _sp(x, cfg)
     h = apply_norm(x, layer["mlp_norm"], cfg.norm_type)
+    quant = get_quant(cfg)
     if cfg.moe is not None:
         y = moe_forward(h, layer["moe"], cfg)
         if cfg.moe.dense_residual:
-            y = y + mlp_forward(h, layer["dense_mlp"], cfg.mlp_type)
+            y = y + mlp_forward(h, layer["dense_mlp"], cfg.mlp_type, quant)
     else:
-        y = mlp_forward(h, layer["mlp"], cfg.mlp_type)
+        y = mlp_forward(h, layer["mlp"], cfg.mlp_type, quant)
     out = _sp(x + y, cfg)
     return out if kv is None else (out, kv)
 
@@ -300,12 +302,13 @@ def decode_step(
             a, kv_new = decode_attention(hn, layer["attn"], cfg, kv, pos)
             h = h + a
             hn = apply_norm(h, layer["mlp_norm"], cfg.norm_type)
+            quant = get_quant(cfg)
             if cfg.moe is not None:
                 y = moe_forward(hn, layer["moe"], cfg)
                 if cfg.moe.dense_residual:
-                    y = y + mlp_forward(hn, layer["dense_mlp"], cfg.mlp_type)
+                    y = y + mlp_forward(hn, layer["dense_mlp"], cfg.mlp_type, quant)
             else:
-                y = mlp_forward(hn, layer["mlp"], cfg.mlp_type)
+                y = mlp_forward(hn, layer["mlp"], cfg.mlp_type, quant)
             return h + y, kv_new
 
         x, new_cache = jax.lax.scan(
@@ -326,7 +329,7 @@ def decode_step(
                 a, kv_new = decode_attention(hn, shared["attn"], cfg, kv, pos)
                 h = h + a
                 hn = apply_norm(h, shared["mlp_norm"], cfg.norm_type)
-                h = h + mlp_forward(hn, shared["mlp"], cfg.mlp_type)
+                h = h + mlp_forward(hn, shared["mlp"], cfg.mlp_type, get_quant(cfg))
                 return h, kv_new
 
             attn_slot = idx // every

@@ -30,6 +30,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.dist.collectives import _ambient_axis_names
+from repro.quant import get_quant
 from .layers import dense_init, mlp_forward
 
 DATA_AXES = ("pod", "data")
@@ -104,9 +105,14 @@ def _moe_block(x, router, gate, up, down, cfg: ModelConfig,
     xf_pad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
     buf = xf_pad[token_for_slot].reshape(e_loc, capacity, d)
 
-    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, gate))
-    h = h * jnp.einsum("ecd,edf->ecf", buf, up)
-    out_buf = jnp.einsum("ecf,efd->ecd", h, down)  # [E_loc, C, d]
+    # Expert matmuls via the quant policy: [E_loc, C, d] x [E_loc, d, f]
+    # batched dots run int8 with int32 accumulation when cfg.quant covers
+    # the "moe" class (per-row token scales, per-expert-channel weight
+    # scales); otherwise the plain einsum.
+    quant = get_quant(cfg)
+    h = jax.nn.silu(quant.dot_batched(buf, gate, "moe"))
+    h = h * quant.dot_batched(buf, up, "moe")
+    out_buf = quant.dot_batched(h, down, "moe")  # [E_loc, C, d]
 
     # Combine: weight rows and scatter-add back to tokens (one scatter of
     # [E_loc*C, d]; sentinel rows drop).
@@ -181,4 +187,6 @@ def moe_with_dense_residual(
     x: jax.Array, params: dict, dense_params: dict, cfg: ModelConfig
 ) -> jax.Array:
     """Arctic: dense FFN running in parallel with the MoE branch."""
-    return moe_forward(x, params, cfg) + mlp_forward(x, dense_params, cfg.mlp_type)
+    return moe_forward(x, params, cfg) + mlp_forward(
+        x, dense_params, cfg.mlp_type, get_quant(cfg)
+    )

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.quant import get_quant
 from .layers import dense_init, rms_norm
 
 
@@ -135,8 +136,9 @@ def mamba_forward(
     ssm = cfg.ssm
     d_inner, nheads, _ = _dims(cfg)
     b, s, _ = x.shape
+    quant = get_quant(cfg)
 
-    proj = x @ params["in_proj"]
+    proj = quant.dot(x, params["in_proj"], "ssm")
     z, xbc, dt_raw = _split_proj(proj, cfg)
     xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
     xin, B, C = jnp.split(xbc, [d_inner, d_inner + ssm.state_dim], axis=-1)
@@ -161,7 +163,7 @@ def mamba_forward(
     y = y.reshape(b, s, d_inner).astype(x.dtype)
     y = y * jax.nn.silu(z)
     y = rms_norm(y, params["norm_scale"])
-    return y @ params["out_proj"]
+    return quant.dot(y, params["out_proj"], "ssm")
 
 
 def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> MambaCache:
@@ -183,8 +185,9 @@ def mamba_decode(
     ssm = cfg.ssm
     d_inner, nheads, conv_ch = _dims(cfg)
     b = x.shape[0]
+    quant = get_quant(cfg)
 
-    proj = x @ params["in_proj"]
+    proj = quant.dot(x, params["in_proj"], "ssm")
     z, xbc, dt_raw = _split_proj(proj, cfg)
 
     # Conv state update: window = [cache.conv, xbc]
@@ -206,4 +209,4 @@ def mamba_decode(
     y = y.reshape(b, 1, d_inner).astype(x.dtype)
     y = y * jax.nn.silu(z)
     y = rms_norm(y, params["norm_scale"])
-    return y @ params["out_proj"], MambaCache(conv=new_conv, ssm=h_new)
+    return quant.dot(y, params["out_proj"], "ssm"), MambaCache(conv=new_conv, ssm=h_new)

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.quant import get_quant
 from .layers import dense_init, rms_norm
 
 
@@ -74,11 +75,12 @@ def mlstm_forward(x: jax.Array, params: dict, cfg: ModelConfig) -> jax.Array:
     b, s, d = x.shape
     nh = cfg.num_heads
     p = d // nh
-    q = (x @ params["wq"]).reshape(b, s, nh, p).astype(jnp.float32)
-    k = (x @ params["wk"]).reshape(b, s, nh, p).astype(jnp.float32)
-    v = (x @ params["wv"]).reshape(b, s, nh, p).astype(jnp.float32)
-    i_raw = (x @ params["wi"] + params["bi"]).astype(jnp.float32)  # [B,S,H]
-    f_raw = (x @ params["wf"] + params["bf"]).astype(jnp.float32)
+    qd = lambda w: get_quant(cfg).dot(x, params[w], "xlstm")  # noqa: E731
+    q = qd("wq").reshape(b, s, nh, p).astype(jnp.float32)
+    k = qd("wk").reshape(b, s, nh, p).astype(jnp.float32)
+    v = qd("wv").reshape(b, s, nh, p).astype(jnp.float32)
+    i_raw = (qd("wi") + params["bi"]).astype(jnp.float32)  # [B,S,H]
+    f_raw = (qd("wf") + params["bf"]).astype(jnp.float32)
 
     init = MLSTMState(
         c=jnp.zeros((b, nh, p, p), jnp.float32),
@@ -92,22 +94,23 @@ def mlstm_forward(x: jax.Array, params: dict, cfg: ModelConfig) -> jax.Array:
     _, hs = jax.lax.scan(lambda st, inp: _mlstm_step(st, inp, p), init, xs)
     h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
     h = rms_norm(h, params["norm_scale"])
-    return h @ params["wo"]
+    return get_quant(cfg).dot(h, params["wo"], "xlstm")
 
 
 def mlstm_decode(x, params, cfg: ModelConfig, state: MLSTMState):
     b, _, d = x.shape
     nh = cfg.num_heads
     p = d // nh
-    q = (x @ params["wq"])[:, 0].reshape(b, nh, p).astype(jnp.float32)
-    k = (x @ params["wk"])[:, 0].reshape(b, nh, p).astype(jnp.float32)
-    v = (x @ params["wv"])[:, 0].reshape(b, nh, p).astype(jnp.float32)
-    i_raw = (x @ params["wi"] + params["bi"])[:, 0].astype(jnp.float32)
-    f_raw = (x @ params["wf"] + params["bf"])[:, 0].astype(jnp.float32)
+    qd = lambda w: get_quant(cfg).dot(x, params[w], "xlstm")  # noqa: E731
+    q = qd("wq")[:, 0].reshape(b, nh, p).astype(jnp.float32)
+    k = qd("wk")[:, 0].reshape(b, nh, p).astype(jnp.float32)
+    v = qd("wv")[:, 0].reshape(b, nh, p).astype(jnp.float32)
+    i_raw = (qd("wi") + params["bi"])[:, 0].astype(jnp.float32)
+    f_raw = (qd("wf") + params["bf"])[:, 0].astype(jnp.float32)
     new_state, h = _mlstm_step(state, (q, k, v, i_raw, f_raw), p)
     h = h.reshape(b, 1, d).astype(x.dtype)
     h = rms_norm(h, params["norm_scale"])
-    return h @ params["wo"], new_state
+    return get_quant(cfg).dot(h, params["wo"], "xlstm"), new_state
 
 
 def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
@@ -133,11 +136,14 @@ def slstm_params(key, cfg: ModelConfig, dtype) -> dict:
     return p
 
 
-def _slstm_step(params, state: SLSTMState, x_t: jax.Array):
+def _slstm_step(params, state: SLSTMState, x_t: jax.Array, quant=None):
     """x_t: [B, D] (pre-activations use recurrent h)."""
     h_prev = state.h
+    dot = (lambda a, w: quant.dot(a, w, "xlstm")) if quant else (lambda a, w: a @ w)
     pre = lambda g: (  # noqa: E731
-        x_t @ params[f"w{g}"] + h_prev.astype(x_t.dtype) @ params[f"r{g}"] + params[f"b{g}"]
+        dot(x_t, params[f"w{g}"])
+        + dot(h_prev.astype(x_t.dtype), params[f"r{g}"])
+        + params[f"b{g}"]
     ).astype(jnp.float32)
     i_raw, f_raw, z_raw, o_raw = pre("i"), pre("f"), pre("z"), pre("o")
     logf = -jax.nn.softplus(-f_raw)
@@ -153,8 +159,9 @@ def _slstm_step(params, state: SLSTMState, x_t: jax.Array):
 def slstm_forward(x: jax.Array, params: dict, cfg: ModelConfig) -> jax.Array:
     b, s, d = x.shape
     init = init_slstm_state(cfg, b)
+    quant = get_quant(cfg)
     _, hs = jax.lax.scan(
-        lambda st, xt: _slstm_step(params, st, xt), init, jnp.moveaxis(x, 1, 0)
+        lambda st, xt: _slstm_step(params, st, xt, quant), init, jnp.moveaxis(x, 1, 0)
     )
     h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
     h = rms_norm(h, params["norm_scale"])
@@ -162,7 +169,7 @@ def slstm_forward(x: jax.Array, params: dict, cfg: ModelConfig) -> jax.Array:
 
 
 def slstm_decode(x, params, cfg: ModelConfig, state: SLSTMState):
-    new_state, h = _slstm_step(params, state, x[:, 0])
+    new_state, h = _slstm_step(params, state, x[:, 0], get_quant(cfg))
     h = h[:, None, :].astype(x.dtype)
     return rms_norm(h, params["norm_scale"]), new_state
 

@@ -22,15 +22,18 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+# Per-tensor symmetric int8 (de)quantization lives in repro.quant now (the
+# serving/training quantization subsystem); re-exported here because the
+# compression path and its tests address them through this module.
+from repro.quant.quantize import dequantize_int8, quantize_int8
 
-def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
-    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-20) / 127.0
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
-    return q.astype(jnp.float32) * scale
+__all__ = [
+    "quantize_int8",
+    "dequantize_int8",
+    "compress_with_feedback",
+    "compressed_pmean",
+    "init_residual",
+]
 
 
 def compress_with_feedback(

@@ -1,0 +1,27 @@
+"""``repro.quant`` — int8 quantization subsystem spanning train and serve.
+
+Pieces:
+  * ``QuantConfig`` / ``parse_quant`` — the policy (config.py), carried on
+    ``ModelConfig.quant`` and parsed from ``--quant`` CLI flags;
+  * ``Quant`` / ``get_quant`` — the MaxText-style object model code calls
+    (``quant.dot(x, w, layer_class)``) (policy.py);
+  * ``int8_dot`` / ``int8_dot_batched`` — dynamic per-row int8 quantize ->
+    int32-accumulating ``lax.dot_general`` -> per-channel dequant epilogue,
+    with straight-through gradients (quantize.py);
+  * ``quantize_kv`` / ``dequantize_kv`` — int8 KV-cache storage with
+    per-token/per-head scales (kv.py);
+  * ``quantize_int8`` / ``dequantize_int8`` — per-tensor primitives, also
+    the backbone of ``repro.optim.grad_compress``.
+"""
+
+from .config import LAYER_CLASSES, QUANT_FLAGS, QuantConfig, parse_quant  # noqa: F401
+from .kv import dequantize_kv, quantize_kv  # noqa: F401
+from .policy import Quant, get_quant  # noqa: F401
+from .quantize import (  # noqa: F401
+    dequantize_int8,
+    int8_dot,
+    int8_dot_batched,
+    quantize_int8,
+    quantize_rows,
+    tree_bytes,
+)

@@ -1,0 +1,36 @@
+"""int8 KV-cache storage: per-token/per-head symmetric scales.
+
+Each cached K (or V) vector — one (slot, position, kv_head) row of
+``head_dim`` values — gets its own fp32 scale, so a token's quantized K/V
+is independent of everything else in the cache.  Chunked flash prefill and
+the decode scatter-write therefore produce byte-identical cache contents
+for the same token, and dequantized attention matches between the two
+paths exactly (the token-equivalence contract).
+
+At rest the cache is ``head_dim`` int8 + 4 scale bytes per row vs
+``4 * head_dim`` bytes fp32 — a (d + 4)/(4d) footprint, ~3.2x smaller at
+d=16 and ~3.8x at d=128 (~2x vs bf16).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .quantize import INT8_MAX, _EPS
+
+
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """[..., d] -> (int8 [..., d], f32 scale [...]): one scale per vector."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(amax, _EPS) / INT8_MAX
+    q = jnp.clip(
+        jnp.round(xf / scale[..., None]), -INT8_MAX, INT8_MAX
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Inverse of ``quantize_kv``: int8 payload x per-vector scale."""
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)

@@ -1,0 +1,51 @@
+"""The ``Quant`` policy object threaded through the forward path.
+
+MaxText threads an AQT ``Quant`` through every layer; here the analogue is
+a tiny immutable wrapper over ``QuantConfig`` whose ``dot`` either runs the
+plain fp matmul or the integer-domain one, keyed by the layer class the
+call site declares.  Model code never branches on quantization itself —
+it calls ``quant.dot(x, w, "mlp")`` unconditionally and the policy decides.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from .config import QuantConfig
+from .quantize import int8_dot, int8_dot_batched
+
+
+@dataclasses.dataclass(frozen=True)
+class Quant:
+    cfg: Optional[QuantConfig] = None
+
+    def active(self, layer_class: str) -> bool:
+        return self.cfg is not None and self.cfg.active_for(layer_class)
+
+    @property
+    def per_channel(self) -> bool:
+        return self.cfg is not None and self.cfg.granularity == "per_channel"
+
+    @property
+    def quantized_kv(self) -> bool:
+        return self.cfg is not None and self.cfg.kv_cache
+
+    def dot(self, x: jax.Array, w: jax.Array, layer_class: str) -> jax.Array:
+        """``x [..., d] @ w [d, f]``, int8 when the policy covers the class."""
+        if not self.active(layer_class):
+            return x @ w
+        return int8_dot(x, w, per_channel=self.per_channel)
+
+    def dot_batched(self, x: jax.Array, w: jax.Array, layer_class: str) -> jax.Array:
+        """Expert-batched ``x [E, ..., d] @ w [E, d, f]`` (MoE matmuls)."""
+        if not self.active(layer_class):
+            return jax.numpy.einsum("e...d,edf->e...f", x, w)
+        return int8_dot_batched(x, w, per_channel=self.per_channel)
+
+
+def get_quant(cfg) -> Quant:
+    """Policy for a ``ModelConfig`` (a no-op policy when quant is unset)."""
+    return Quant(getattr(cfg, "quant", None))

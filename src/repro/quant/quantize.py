@@ -1,0 +1,130 @@
+"""int8 quantized matmul primitives.
+
+The forward path is integer-domain end to end: dynamic per-row symmetric
+int8 quantization of the activation, static-rule symmetric quantization of
+the weight (per output channel or per tensor), an int8 x int8 ->
+**int32-accumulating** ``lax.dot_general`` (the systolic array's native
+low-precision mode), and a per-channel dequant epilogue.
+
+Gradients are straight-through (AQT-style): the backward rule is the plain
+fp matmul vjp against the unquantized operands, so the same ``quant.dot``
+serves train and serve.
+
+Per-row activation scales are the load-bearing choice: a token's quantized
+projection depends only on that token's row, so a chunked-prefill matmul
+over [B, C, d] and a decode matmul over [B, 1, d] produce bit-identical
+values for the same token — the serve engine's token-equivalence harness
+holds under quantization.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+_EPS = 1e-20
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization -> (q int8, scalar scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), _EPS) / INT8_MAX
+    q = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_rows(x: jax.Array, axis: int = -1) -> tuple[jax.Array, jax.Array]:
+    """Per-row symmetric int8: one scale per slice along ``axis``.
+
+    Returns (q int8, scale f32 with ``axis`` kept at size 1 for broadcast).
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, _EPS) / INT8_MAX
+    q = jnp.clip(jnp.round(xf / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def _quantize_weight(w: jax.Array, per_channel: bool, contract_axis: int):
+    """Weight scales: per output channel (reduce the contraction axis) or
+    one scalar per tensor."""
+    wf = w.astype(jnp.float32)
+    if per_channel:
+        amax = jnp.max(jnp.abs(wf), axis=contract_axis, keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(wf))
+    scale = jnp.maximum(amax, _EPS) / INT8_MAX
+    q = jnp.clip(jnp.round(wf / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def _int8_dot_impl(x: jax.Array, w: jax.Array, per_channel: bool) -> jax.Array:
+    """x [..., d] @ w [d, f] via int8 with int32 accumulation."""
+    xq, xs = quantize_rows(x)  # xs [..., 1]
+    wq, ws = _quantize_weight(w, per_channel, contract_axis=0)  # ws [1, f] | scalar
+    acc = jax.lax.dot_general(
+        xq, wq, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    out = acc.astype(jnp.float32) * xs * jnp.reshape(ws, (-1,))
+    return out.astype(x.dtype)
+
+
+def _make_int8_dot(per_channel: bool):
+    @jax.custom_vjp
+    def int8_dot(x, w):
+        return _int8_dot_impl(x, w, per_channel)
+
+    def fwd(x, w):
+        return int8_dot(x, w), (x, w)
+
+    def bwd(res, g):
+        # Straight-through: gradients of the fp matmul w.r.t. the
+        # unquantized operands (AQT's default training rule).
+        x, w = res
+        g32 = g.astype(jnp.float32)
+        dx = jax.lax.dot_general(
+            g32, w.astype(jnp.float32), (((g.ndim - 1,), (1,)), ((), ())),
+        )
+        x2 = x.astype(jnp.float32).reshape(-1, x.shape[-1])
+        g2 = g32.reshape(-1, g.shape[-1])
+        dw = x2.T @ g2
+        return dx.astype(x.dtype), dw.astype(w.dtype)
+
+    int8_dot.defvjp(fwd, bwd)
+    return int8_dot
+
+
+# Two closed-over variants so jit caches trace each rule once.
+_INT8_DOT = {True: _make_int8_dot(True), False: _make_int8_dot(False)}
+
+
+def int8_dot(x: jax.Array, w: jax.Array, *, per_channel: bool = True) -> jax.Array:
+    """Quantized ``x @ w`` (differentiable, straight-through backward)."""
+    return _INT8_DOT[per_channel](x, w)
+
+
+def int8_dot_batched(
+    x: jax.Array, w: jax.Array, *, per_channel: bool = True
+) -> jax.Array:
+    """Expert-batched quantized matmul: x [E, ..., d] @ w [E, d, f].
+
+    vmap over the leading (expert) axis of ``int8_dot`` — custom_vjp
+    composes with vmap, so the straight-through backward batches too.
+    """
+    return jax.vmap(_INT8_DOT[per_channel])(x, w)
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of every array leaf (cache-footprint accounting)."""
+    return sum(
+        leaf.size * leaf.dtype.itemsize
+        for leaf in jax.tree.leaves(tree)
+        if hasattr(leaf, "dtype")
+    )

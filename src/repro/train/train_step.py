@@ -70,7 +70,10 @@ def make_train_step(
         q, scales, new_residual = compress_with_feedback(grads, residual)
         grads = jax.tree.map(dequantize_int8, q, scales)
         new_params, new_opt = optimizer.update(grads, opt_state, params)
-        return new_params, new_opt, new_residual, {"loss": loss}
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        return new_params, new_opt, new_residual, {"loss": loss, "grad_norm": gnorm}
 
     return train_step_compressed
 

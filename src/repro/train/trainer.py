@@ -8,9 +8,12 @@ from latest, watchdog thresholds, preemption drain) is the multi-host one.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Callable, Optional
+
+_NULL_CTX = contextlib.nullcontext()
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +25,7 @@ from repro.data import DataConfig, make_source
 from repro.dist.fault import PreemptionHandler, StepWatchdog
 from repro.models import init_params, lm_loss
 from repro.optim import make_optimizer
+from repro.optim.grad_compress import init_residual
 from repro.optim.schedules import cosine_with_warmup
 from .train_step import make_train_step
 
@@ -39,6 +43,9 @@ class TrainerConfig:
     log_every: int = 10
     seed: int = 0
     watchdog_factor: float = 10.0
+    # int8-compressed DP gradient reduction with error feedback
+    # (repro.optim.grad_compress); adds a residual pytree to the state.
+    compress_grads: bool = False
 
 
 class Trainer:
@@ -50,6 +57,7 @@ class Trainer:
         *,
         token_file: Optional[str] = None,
         hooks: Optional[dict[str, Callable]] = None,
+        mesh=None,
     ):
         self.cfg, self.shape, self.tcfg = cfg, shape, tcfg
         self.data = make_source(cfg, shape, DataConfig(seed=tcfg.seed), token_file)
@@ -57,22 +65,44 @@ class Trainer:
         self.watchdog = StepWatchdog(timeout_factor=tcfg.watchdog_factor)
         self.preempt = PreemptionHandler(install=False)
         self.hooks = hooks or {}
+        self.mesh = mesh
 
         sched = cosine_with_warmup(tcfg.peak_lr, tcfg.warmup_steps, tcfg.total_steps)
         self.optimizer = make_optimizer(tcfg.optimizer, lr=sched)
-        self.step_fn = jax.jit(
-            make_train_step(cfg, self.optimizer, num_microbatches=tcfg.num_microbatches)
+        step = make_train_step(
+            cfg,
+            self.optimizer,
+            num_microbatches=tcfg.num_microbatches,
+            compress_grads=tcfg.compress_grads,
         )
+        self.step_fn = jax.jit(step)
+
+    def _shard_state(self, state: dict) -> dict:
+        """Place params (and the compression residual) per the TP rules when
+        a mesh is given; the jit then reads the layout off the arrays."""
+        if self.mesh is None:
+            return state
+        from repro.dist.sharding import param_shardings
+
+        sh = param_shardings(state["params"], self.cfg, self.mesh)
+        out = dict(state)
+        out["params"] = jax.device_put(state["params"], sh)
+        if "residual" in state:
+            out["residual"] = jax.device_put(state["residual"], sh)
+        return out
 
     # -- state ------------------------------------------------------------
 
     def init_state(self) -> dict:
         params = init_params(self.cfg, jax.random.PRNGKey(self.tcfg.seed))
-        return {
+        state = {
             "params": params,
             "opt": self.optimizer.init(params),
             "step": 0,
         }
+        if self.tcfg.compress_grads:
+            state["residual"] = init_residual(params)
+        return state
 
     def restore_or_init(self) -> dict:
         latest = self.ckpt.latest_step()
@@ -89,19 +119,36 @@ class Trainer:
     # -- loop --------------------------------------------------------------
 
     def run(self, state: Optional[dict] = None) -> dict:
-        state = state or self.restore_or_init()
+        state = self._shard_state(state or self.restore_or_init())
+        ckpt_keys = ("params", "opt") + (
+            ("residual",) if self.tcfg.compress_grads else ()
+        )
+        mesh_ctx = self.mesh or _NULL_CTX
         losses = []
         while state["step"] < self.tcfg.total_steps:
             if self.preempt.requested:
-                self.ckpt.save(state["step"], {k: state[k] for k in ("params", "opt")})
+                self.ckpt.save(state["step"], {k: state[k] for k in ckpt_keys})
                 break
             step = state["step"]
             batch = {k: jnp.asarray(v) for k, v in self.data.batch(step).items()}
             self.watchdog.start_step()
-            params, opt, metrics = self.step_fn(state["params"], state["opt"], batch)
+            with mesh_ctx:
+                if self.tcfg.compress_grads:
+                    params, opt, residual, metrics = self.step_fn(
+                        state["params"], state["opt"], batch, state["residual"]
+                    )
+                    new_state = {
+                        "params": params, "opt": opt,
+                        "residual": residual, "step": step + 1,
+                    }
+                else:
+                    params, opt, metrics = self.step_fn(
+                        state["params"], state["opt"], batch
+                    )
+                    new_state = {"params": params, "opt": opt, "step": step + 1}
             jax.block_until_ready(metrics["loss"])
             dur = self.watchdog.end_step()
-            state = {"params": params, "opt": opt, "step": step + 1}
+            state = new_state
             losses.append(float(metrics["loss"]))
             if "on_step" in self.hooks:
                 self.hooks["on_step"](state, metrics)
@@ -111,7 +158,7 @@ class Trainer:
                     f"gnorm {float(metrics['grad_norm']):.3f} {dur * 1e3:.0f} ms"
                 )
             if (step + 1) % self.tcfg.ckpt_every == 0:
-                self.ckpt.save_async(step + 1, {k: state[k] for k in ("params", "opt")})
+                self.ckpt.save_async(step + 1, {k: state[k] for k in ckpt_keys})
         self.ckpt.wait()
         state["losses"] = losses
         return state

@@ -1,0 +1,317 @@
+"""Tests for the ``repro.quant`` int8 subsystem.
+
+Covers the dot primitive (closeness + straight-through gradients), the
+policy threading (config/registry/flag parsing), quantized-vs-fp32 forward
+parity across every model family, the int8 KV cache (footprint, exact
+engine token-equivalence, fidelity vs the fp32 cache), and the
+grad-compress train step under a mesh (see bottom; needs the 8-device
+XLA flag like tests/test_distribution.py).
+"""
+
+import os
+
+# The mesh tests at the bottom need >1 CPU device (same pattern as
+# tests/test_distribution.py — harmless if already set by the session).
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    )
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.configs.registry import get_smoke_config  # noqa: E402
+from repro.models import forward, init_params  # noqa: E402
+from repro.models.attention import QuantKVCache  # noqa: E402
+from repro.models.model import decode_step, init_cache  # noqa: E402
+from repro.quant import (  # noqa: E402
+    Quant,
+    QuantConfig,
+    dequantize_kv,
+    int8_dot,
+    parse_quant,
+    quantize_kv,
+    quantize_rows,
+)
+from repro.serve import Request, ServeEngine, sequential_greedy_decode  # noqa: E402
+
+from test_serve_engine import MAX_LEN, TINY  # noqa: E402
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_compiled_state():
+    """Drop this module's compiled executables on teardown.
+
+    These tests compile an unusually large number of distinct programs
+    (five-architecture parity, two cache layouts through the engine, jitted
+    teacher-forced decode loops); releasing them keeps the process's native
+    compiler state small for the modules that run after in a full-suite
+    invocation.
+    """
+    yield
+    jax.clear_caches()
+
+
+# -- primitive ------------------------------------------------------------------
+
+
+def test_int8_dot_close_to_fp():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (8, 64), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 32), jnp.float32) * 0.1
+    exact = x @ w
+    approx = int8_dot(x, w)
+    rel = jnp.linalg.norm(approx - exact) / jnp.linalg.norm(exact)
+    assert rel < 0.02, float(rel)
+
+
+def test_int8_dot_batched_rank3():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 16), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 8), jnp.float32)
+    out = int8_dot(x, w)
+    assert out.shape == (2, 5, 8)
+    # Per-row activation scales: each token row quantizes independently, so
+    # the same row produces bit-identical output at any batch/seq position.
+    single = int8_dot(x[1:2, 2:3], w)
+    np.testing.assert_array_equal(np.asarray(out[1:2, 2:3]), np.asarray(single))
+
+
+def test_int8_dot_straight_through_grads():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 8), jnp.float32)
+
+    gx, gw = jax.grad(lambda x, w: jnp.sum(int8_dot(x, w)), argnums=(0, 1))(x, w)
+    # Straight-through: gradients are the fp matmul's, against fp operands.
+    ones = jnp.ones((4, 8), jnp.float32)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(ones @ w.T), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(x.T @ ones), rtol=1e-5)
+
+
+def test_quantize_rows_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (6, 32), jnp.float32)
+    q, s = quantize_rows(x)
+    assert q.dtype == jnp.int8 and s.shape == (6, 1)
+    err = jnp.max(jnp.abs(q.astype(jnp.float32) * s - x))
+    assert err <= jnp.max(jnp.abs(x)) / 127.0 + 1e-6
+
+
+def test_quantize_kv_per_vector():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 4, 16), jnp.float32)
+    q, scale = quantize_kv(x)
+    assert q.shape == x.shape and q.dtype == jnp.int8
+    assert scale.shape == (2, 3, 4)
+    rec = dequantize_kv(q, scale)
+    assert float(jnp.max(jnp.abs(rec - x))) < float(jnp.max(jnp.abs(x))) / 100
+
+
+# -- policy / config threading ---------------------------------------------------
+
+
+def test_parse_quant_flags():
+    assert parse_quant("none") is None
+    full = parse_quant("int8")
+    assert full.kv_cache and full.granularity == "per_channel"
+    assert parse_quant("int8-per-tensor").granularity == "per_tensor"
+    kv_only = parse_quant("int8-kv-only")
+    assert kv_only.kv_cache and kv_only.layer_classes == ()
+    no_kv = parse_quant("int8-no-kv")
+    assert not no_kv.kv_cache and no_kv.layer_classes
+    with pytest.raises(ValueError):
+        parse_quant("fp4")
+
+
+def test_registry_threads_quant():
+    cfg = get_smoke_config("olmo-1b", "int8")
+    assert cfg.quant == QuantConfig()
+    assert get_smoke_config("olmo-1b").quant is None
+    assert get_smoke_config("olmo-1b", "none").quant is None
+
+
+def test_policy_inactive_class_falls_back():
+    q = Quant(QuantConfig(layer_classes=("mlp",)))
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (8, 8), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(q.dot(x, w, "attention")), np.asarray(x @ w)
+    )
+    assert not np.array_equal(np.asarray(q.dot(x, w, "mlp")), np.asarray(x @ w))
+
+
+# -- forward parity across the model zoo ----------------------------------------
+
+PARITY_ARCHS = [
+    "olmo-1b",            # dense
+    "qwen3-moe-235b-a22b",  # moe
+    "qwen2-vl-7b",        # vlm
+    "zamba2-1.2b",        # hybrid (mamba2 + shared attention)
+    "xlstm-125m",         # ssm (mLSTM/sLSTM)
+]
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_forward_parity_quant_vs_fp32(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    if cfg.embedding_inputs:
+        kw = {"embeds": jax.random.normal(
+            jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.float32)}
+    else:
+        kw = {"tokens": jax.random.randint(
+            jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)}
+    ref = forward(params, cfg, **kw)
+    out = forward(params, get_smoke_config(arch, "int8"), **kw)
+    d = np.asarray(out - ref, np.float64)
+    r = np.asarray(ref, np.float64)
+    rel = np.linalg.norm(d) / np.linalg.norm(r)
+    # Measured on these smoke configs: 0.015-0.066 across families.
+    assert rel < 0.15, f"{arch}: rel logit error {rel:.4f}"
+    assert np.isfinite(d).all()
+
+
+# -- int8 KV cache ---------------------------------------------------------------
+
+KV_CFG = dataclasses.replace(TINY, quant=parse_quant("int8-kv-only"))
+Q_CFG = dataclasses.replace(TINY, quant=QuantConfig())
+
+
+def test_quant_cache_structure_and_footprint():
+    fp = init_cache(TINY, 1, MAX_LEN)
+    q = init_cache(Q_CFG, 1, MAX_LEN)
+    assert isinstance(q, QuantKVCache)
+    assert q.k.dtype == jnp.int8 and q.k_scale.dtype == jnp.float32
+    # [L, B, S, Hkv, d] payloads, [L, B, S, Hkv] scales, [L, B] lengths.
+    hd = TINY.resolved_head_dim
+    assert q.k.shape == (TINY.num_layers, 1, MAX_LEN, TINY.num_kv_heads, hd)
+    assert q.k_scale.shape == (TINY.num_layers, 1, MAX_LEN, TINY.num_kv_heads)
+
+    nbytes = lambda t: sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(t))
+    ratio = nbytes(fp) / nbytes(q)
+    assert ratio >= 3.0, ratio  # (d+4)/4d = 3.2x at head_dim 16
+
+
+def test_quant_decode_step_runs():
+    params = init_params(TINY, jax.random.PRNGKey(0))
+    cache = init_cache(Q_CFG, 2, MAX_LEN)
+    toks = jnp.array([[3], [5]], jnp.int32)
+    logits, new_cache = decode_step(params, Q_CFG, toks, cache, jnp.zeros(2, jnp.int32))
+    assert logits.shape == (2, 1, TINY.vocab_size)
+    assert isinstance(new_cache, QuantKVCache)
+    assert int(jnp.sum(jnp.abs(new_cache.k.astype(jnp.int32)))) > 0
+
+
+def test_engine_token_equivalence_under_quant():
+    """Continuous batching must not change tokens — also under int8.
+
+    Per-row activation scales and per-token KV scales make chunked prefill
+    and decode bit-identical per token, so the equivalence is *exact*.
+    """
+    params = init_params(TINY, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(1, TINY.vocab_size, size=n).astype(np.int32)
+        for n in (3, 7, 12, 5)
+    ]
+    refs = [
+        sequential_greedy_decode(Q_CFG, params, p, 10, max_len=MAX_LEN)
+        for p in prompts
+    ]
+    eng = ServeEngine(Q_CFG, params, batch_size=2, max_len=MAX_LEN)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=10))
+    done = {r.rid: r.output for r in eng.run()}
+    for i, ref in enumerate(refs):
+        assert done[i] == ref, (i, done[i], ref)
+
+
+def test_chunked_prefill_matches_unchunked_under_quant():
+    params = init_params(TINY, jax.random.PRNGKey(0))
+    prompt = np.arange(1, 20, dtype=np.int32) % TINY.vocab_size
+
+    def decode(chunk):
+        eng = ServeEngine(
+            Q_CFG, params, batch_size=1, max_len=MAX_LEN, prefill_chunk=chunk
+        )
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=8))
+        return eng.run()[0].output
+
+    assert decode(None) == decode(8)
+
+
+def test_int8_kv_cache_fidelity_vs_fp32_cache():
+    """Decoding against the int8 KV cache picks the same greedy token as
+    the fp32 cache >= 95% of the time.
+
+    Teacher-forced: the *same* token stream feeds both caches step by
+    step, isolating the cache-quantization effect (a free-running
+    comparison compounds trajectory divergence after any disagreement —
+    measured 0.98-1.0 here across seeds vs 0.82-0.96 free-running)."""
+    import functools
+
+    params = init_params(TINY, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(100), (2, 32), 1, TINY.vocab_size)
+    step_fp = jax.jit(functools.partial(decode_step, cfg=TINY))
+    step_q = jax.jit(functools.partial(decode_step, cfg=KV_CFG))
+    cache_fp = init_cache(TINY, 2, MAX_LEN)
+    cache_q = init_cache(KV_CFG, 2, MAX_LEN)
+    agree = total = 0
+    for t in range(32):
+        tok = toks[:, t:t + 1]
+        pos = jnp.full((2,), t, jnp.int32)
+        lf, cache_fp = step_fp(params, tokens=tok, cache=cache_fp, position=pos)
+        lq, cache_q = step_q(params, tokens=tok, cache=cache_q, position=pos)
+        agree += int((jnp.argmax(lf, -1) == jnp.argmax(lq, -1)).sum())
+        total += 2
+    assert agree / total >= 0.95, agree / total
+
+
+# -- grad compression under a mesh ----------------------------------------------
+
+mesh_only = pytest.mark.skipif(
+    jax.device_count() < 8, reason="needs 8 host-platform devices"
+)
+
+
+@mesh_only
+def test_trainer_compress_grads_under_mesh(tmp_path):
+    from repro.configs.base import ShapeConfig
+    from repro.launch.mesh import make_debug_mesh
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_smoke_config("olmo-1b", "int8")
+    tcfg = TrainerConfig(
+        total_steps=3, ckpt_every=100, log_every=10,
+        ckpt_dir=str(tmp_path / "ckpt"), compress_grads=True,
+    )
+    mesh = make_debug_mesh(4, 2)
+    tr = Trainer(cfg, ShapeConfig("t", 32, 8, "train"), tcfg, mesh=mesh)
+    state = tr.run()
+    assert state["step"] == 3
+    assert "residual" in state
+    assert np.isfinite(state["losses"]).all()
+    # Error feedback is live: residuals are non-zero after a step.
+    res_norm = sum(
+        float(jnp.sum(jnp.abs(r))) for r in jax.tree.leaves(state["residual"])
+    )
+    assert res_norm > 0.0
+
+
+@mesh_only
+def test_quant_cache_shardings_cover_quant_leaves():
+    from repro.dist.sharding import cache_shardings
+    from repro.launch.mesh import make_debug_mesh
+
+    mesh = make_debug_mesh(4, 2)
+    cache = init_cache(Q_CFG, 4, MAX_LEN)
+    sh = cache_shardings(cache, Q_CFG, mesh)
+    assert isinstance(sh, QuantKVCache)
+    # int8 payloads shard batch over data and heads over model; the scale
+    # tree co-shards; lengths shard batch only.
+    assert sh.k.spec == jax.sharding.PartitionSpec(None, "data", None, "model", None)
+    assert sh.k_scale.spec == jax.sharding.PartitionSpec(None, "data", None, "model")
+    assert sh.lengths.spec == jax.sharding.PartitionSpec(None, "data")
+    placed = jax.device_put(cache, sh)
+    assert isinstance(placed, QuantKVCache)
