@@ -6,10 +6,12 @@ envelope, Table 3 area overhead, §3.5 cycle counts).
 
 Also emits machine-readable ``BENCH_*.json`` files into the working
 directory — ``BENCH_serve.json`` (continuous-batching decode tokens/s),
-``BENCH_flash.json`` (flash attention fwd/bwd FLOPs/s vs references) and
+``BENCH_flash.json`` (flash attention fwd/bwd FLOPs/s vs references),
 ``BENCH_quant.json`` (int8 decode throughput, KV-cache footprint and
-greedy fidelity) — CI uploads them as workflow artifacts so throughput is
-tracked per commit.
+greedy fidelity), ``BENCH_spec.json`` (speculative decoding acceptance
+rate and target-step reduction) and ``BENCH_train.json`` (train-step
+steps/s and tokens/s) — CI uploads them as workflow artifacts so
+throughput is tracked per commit.
 
 Roofline terms per (arch x mesh) come from the compiled dry-run
 (launch/dryrun.py + launch/roofline.py), not from here — this harness is
@@ -31,8 +33,10 @@ def main() -> None:
         quant_bench,
         section35_cycles,
         serve_bench,
+        spec_bench,
         table2_accuracy,
         table3_area,
+        train_bench,
     )
 
     modules = [
@@ -45,6 +49,8 @@ def main() -> None:
         ("serve", serve_bench),
         ("flash", flash_bench),
         ("quant", quant_bench),
+        ("spec", spec_bench),
+        ("train", train_bench),
     ]
     csv_rows: list[tuple[str, float, str]] = []
     failed = []

@@ -1,0 +1,136 @@
+"""Speculative decoding: accepted tokens/step, acceptance rate, tok/s.
+
+Runs the serving benchmark model through the engine twice — vanilla
+continuous batching and speculative mode (repro.spec) — on identical
+request streams, and records:
+
+  * acceptance rate and accepted tokens per verify step;
+  * target-model generate steps, vanilla vs speculative — for the
+    self-draft sanity config (draft == target) acceptance must be exactly
+    1.0 and the target must take >= 1.5x fewer steps;
+  * decode tokens/s for both modes (the PR 6 ``BENCH_serve.json`` number
+    is the vanilla baseline) plus an int8-quantized-draft variant's
+    acceptance rate (the MatrixFlow-style near-free draft).
+
+Outputs are asserted token-identical between the two modes — the lossless
+greedy guarantee — and written to ``BENCH_spec.json``; CI uploads it per
+commit.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.models import init_params
+from repro.serve import Request, ServeEngine
+from repro.spec import SpecConfig
+
+from .serve_bench import BATCH, CFG, PROMPT_LEN
+
+MAX_LEN = 128
+MAX_NEW = 40
+LOOKAHEAD = 4
+
+
+def _drain(engine, prompts, max_new=MAX_NEW):
+    for i, p in enumerate(prompts):
+        engine.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
+    t0 = time.perf_counter()
+    done = engine.run()
+    jax.block_until_ready(engine.cache)
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.output) for r in done)
+    return {r.rid: r.output for r in done}, toks / dt
+
+
+def _engine(params, spec=None):
+    return ServeEngine(
+        CFG, params, batch_size=BATCH, max_len=MAX_LEN, prefill_buckets=(32,),
+        spec=spec, draft_params=params if spec is not None else None,
+    )
+
+
+def run(csv_rows: list) -> dict:
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(0, CFG.vocab_size, size=PROMPT_LEN).astype(np.int32)
+        for _ in range(BATCH)
+    ]
+
+    # Warmup drain compiles every executable, then a fresh timed drain
+    # measures warm throughput (same engine, executables cached).  Stats
+    # counters accumulate across drains, so delta against the warmup.
+    vanilla = _engine(params)
+    _drain(vanilla, prompts, max_new=4)
+    warm_decode = vanilla.stats["decode_steps"]
+    out_v, tok_s_v = _drain(vanilla, prompts)
+    vanilla_steps = vanilla.stats["decode_steps"] - warm_decode
+
+    spec_cfg = SpecConfig(lookahead=LOOKAHEAD)  # self-draft sanity config
+    spec = _engine(params, spec=spec_cfg)
+    _drain(spec, prompts, max_new=4)
+    warm = dict(spec.stats)
+    out_s, tok_s_s = _drain(spec, prompts)
+    verify_steps = spec.stats["verify_steps"] - warm["verify_steps"]
+    accepted = spec.stats["accepted_tokens"] - warm["accepted_tokens"]
+    proposed = spec.stats["proposed_tokens"] - warm["proposed_tokens"]
+    acceptance = accepted / max(proposed, 1)
+    accepted_per_step = accepted / max(verify_steps, 1)
+    emitted = sum(len(o) for o in out_s.values())
+    emitted_per_step = emitted / max(verify_steps, 1)
+
+    assert out_s == out_v, "speculative greedy decode diverged from vanilla"
+    assert acceptance == 1.0, (
+        f"self-draft acceptance {acceptance:.3f} != 1.0"
+    )
+    step_reduction = vanilla_steps / max(verify_steps, 1)
+    assert step_reduction >= 1.5, (
+        f"only {step_reduction:.2f}x fewer target steps (< 1.5x)"
+    )
+
+    # int8 draft (target stays fp32): lossless by construction, acceptance
+    # measures how much quantization costs in agreement.
+    q = _engine(params, spec=SpecConfig(lookahead=LOOKAHEAD, draft_quant="int8"))
+    out_q, _ = _drain(q, prompts)
+    assert out_q == out_v, "int8-draft speculative decode diverged from vanilla"
+    q_acceptance = q.acceptance_rate()
+
+    csv_rows.append((
+        "spec_decode", 1e6 / max(tok_s_s, 1e-9),
+        f"accept={acceptance:.3f};tok_per_verify={emitted_per_step:.2f};"
+        f"step_reduction={step_reduction:.2f}x;int8_draft_accept={q_acceptance:.3f}",
+    ))
+
+    result = {
+        "benchmark": "spec_decode",
+        "lookahead": LOOKAHEAD,
+        "acceptance_rate": {
+            "self_draft": round(acceptance, 4),
+            "int8_draft": round(q_acceptance, 4),
+        },
+        "accepted_tokens_per_verify_step": round(accepted_per_step, 2),
+        "emitted_tokens_per_verify_step": round(emitted_per_step, 2),
+        "target_generate_steps": {
+            "vanilla": vanilla_steps,
+            "speculative": verify_steps,
+            "reduction_x": round(step_reduction, 2),
+        },
+        "decode_tokens_per_s": {
+            "vanilla": round(tok_s_v, 1),
+            "speculative": round(tok_s_s, 1),
+        },
+        "lossless": True,
+        "model": {
+            "family": CFG.family,
+            "num_layers": CFG.num_layers,
+            "d_model": CFG.d_model,
+        },
+    }
+    with open("BENCH_spec.json", "w") as f:
+        json.dump(result, f, indent=2)
+    return result

@@ -1,0 +1,62 @@
+"""Aggregate all ``BENCH_*.json`` files into one markdown table.
+
+Run after ``python -m benchmarks.run``:
+
+  PYTHONPATH=src python -m benchmarks.summarize
+
+Prints the table to stdout and, when ``GITHUB_STEP_SUMMARY`` is set
+(inside a GitHub Actions step), appends it there too — so every CI run
+shows serve/flash/quant/spec/train throughput on the run page without
+downloading the artifact.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def _flatten(obj, prefix=""):
+    """Nested dict -> dotted-key scalar rows, insertion-ordered."""
+    rows = []
+    for k, v in obj.items():
+        key = f"{prefix}.{k}" if prefix else k
+        if isinstance(v, dict):
+            rows.extend(_flatten(v, key))
+        elif isinstance(v, (int, float, bool, str)):
+            rows.append((key, v))
+        # lists (if any) are detail payloads, not summary metrics
+    return rows
+
+
+def summarize(paths: list[str]) -> str:
+    lines = ["# Benchmark summary", ""]
+    if not paths:
+        lines.append("_no BENCH_*.json files found_")
+        return "\n".join(lines) + "\n"
+    lines += ["| file | metric | value |", "|---|---|---|"]
+    for path in sorted(paths):
+        with open(path) as f:
+            data = json.load(f)
+        name = os.path.basename(path)
+        for key, val in _flatten(data):
+            if key.startswith("model."):  # config echo, not a metric
+                continue
+            lines.append(f"| {name} | {key} | {val} |")
+    return "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    paths = sys.argv[1:] or glob.glob("BENCH_*.json")
+    table = summarize(paths)
+    print(table)
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write(table)
+
+
+if __name__ == "__main__":
+    main()

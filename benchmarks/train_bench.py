@@ -1,0 +1,81 @@
+"""Training throughput: steps/s and tokens/s on a tiny dense config.
+
+Jits ``make_train_step`` (AdamW, single microbatch) on the serving
+benchmark model, drives it with a fixed synthetic token batch, and times
+warm steps only — compile happens in the warmup.  Emits
+``BENCH_train.json`` so CI tracks train-step throughput per commit
+alongside the serve/quant/spec numbers.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import init_params
+from repro.optim import AdamW
+from repro.train.train_step import make_train_step
+
+from .serve_bench import CFG
+
+BATCH = 8
+SEQ_LEN = 64
+WARMUP = 2
+STEPS = 10
+
+
+def run(csv_rows: list) -> dict:
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    opt = AdamW(lr=1e-3)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(CFG, opt))
+
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, CFG.vocab_size, (BATCH, SEQ_LEN))
+    batch = {
+        "tokens": jnp.asarray(toks, jnp.int32),
+        "labels": jnp.asarray(toks, jnp.int32),
+    }
+
+    for _ in range(WARMUP):
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+    jax.block_until_ready(metrics["loss"])
+
+    t0 = time.perf_counter()
+    for _ in range(STEPS):
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+    jax.block_until_ready(metrics["loss"])
+    dt = time.perf_counter() - t0
+
+    steps_per_s = STEPS / dt
+    tokens_per_s = steps_per_s * BATCH * SEQ_LEN
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), f"non-finite loss {loss} after {STEPS} steps"
+
+    csv_rows.append((
+        "train_step", dt / STEPS * 1e6,
+        f"steps_per_s={steps_per_s:.2f};tokens_per_s={tokens_per_s:.0f}",
+    ))
+
+    result = {
+        "benchmark": "train_step",
+        "steps_per_s": round(steps_per_s, 2),
+        "tokens_per_s": round(tokens_per_s, 1),
+        "step_ms": round(dt / STEPS * 1e3, 2),
+        "batch_size": BATCH,
+        "seq_len": SEQ_LEN,
+        "timed_steps": STEPS,
+        "final_loss": round(loss, 4),
+        "model": {
+            "family": CFG.family,
+            "num_layers": CFG.num_layers,
+            "d_model": CFG.d_model,
+        },
+    }
+    with open("BENCH_train.json", "w") as f:
+        json.dump(result, f, indent=2)
+    return result

@@ -14,6 +14,14 @@ prefill bucketing, slot eviction and back-fill even in a smoke run.
                                  (repro.quant; greedy outputs stay
                                  token-identical to sequential decode,
                                  so --check still applies)
+  --spec-draft self|ARCH         speculative decoding (repro.spec): 'self'
+                                 drafts with the target itself (lossless
+                                 sanity mode, acceptance = 1.0); an arch id
+                                 drafts with that smoke config (random
+                                 init in this launcher)
+  --spec-k N                     lookahead: draft tokens verified per round
+  --spec-quant int8              int8 policy on the *draft* only (the
+                                 near-free draft / exact target split)
   --check                        verify every greedy output token-for-token
                                  against sequential single-request decode
 """
@@ -50,6 +58,12 @@ def main() -> None:
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", default=None, help="debug mesh DxM, e.g. 2x4")
+    ap.add_argument("--spec-draft", default=None,
+                    help="speculative decoding draft: 'self' or an arch id")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="speculative lookahead (draft tokens per round)")
+    ap.add_argument("--spec-quant", default="none", choices=QUANT_FLAGS,
+                    help="int8 policy applied to the draft model only")
     ap.add_argument("--check", action="store_true",
                     help="compare against sequential single-request decode")
     args = ap.parse_args()
@@ -72,9 +86,28 @@ def main() -> None:
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
         seed=args.seed,
     )
+
+    spec = draft_params = None
+    if args.spec_draft:
+        from repro.spec import SpecConfig, resolve_draft_config
+
+        spec = SpecConfig(
+            draft_arch=None if args.spec_draft == "self" else args.spec_draft,
+            draft_quant=args.spec_quant if args.spec_quant != "none" else None,
+            lookahead=args.spec_k,
+        )
+        if spec.draft_arch is not None:
+            # No trained weights in this launcher: a random-init draft still
+            # exercises the full draft->verify->rollback path (outputs stay
+            # lossless; only the acceptance rate suffers).
+            draft_params = init_params(
+                resolve_draft_config(spec, cfg), jax.random.PRNGKey(1)
+            )
+
     engine = ServeEngine(
         cfg, params, batch_size=args.batch, max_len=args.max_len,
         prefill_chunk=args.chunk, sampling=sampling, mesh=mesh,
+        spec=spec, draft_params=draft_params,
     )
 
     rng = np.random.default_rng(0)
@@ -96,6 +129,12 @@ def main() -> None:
         f"({toks / dt:.1f} tok/s) | stats {engine.stats} "
         f"| compiles {engine.compile_counts()}"
     )
+    if spec is not None:
+        print(
+            f"spec: acceptance {engine.acceptance_rate():.3f} | "
+            f"{engine.stats['verify_steps']} verify steps for {toks} tokens "
+            f"({toks / max(engine.stats['verify_steps'], 1):.2f} tok/verify)"
+        )
 
     if args.check:
         if not sampling.greedy:

@@ -7,4 +7,6 @@ from .model import (  # noqa: F401
     lm_loss,
     param_shapes,
     prefill_step,
+    rollback_cache,
+    verify_step,
 )

@@ -203,6 +203,74 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
     )
 
 
+def verify_attention(
+    x: jax.Array,  # [B, S, d_model] — S teacher-forced tokens per slot
+    params: dict,
+    cfg: ModelConfig,
+    cache: KVCache,
+    positions: jax.Array,  # [B, S] (or [B, S, 3]) absolute positions
+    write_pos: jax.Array,  # [B] int32: first write row per slot
+) -> tuple[jax.Array, KVCache]:
+    """Batched speculative-verify attention: score S tokens per slot in one
+    pass against the *live* decode cache.
+
+    The spec-decoding core (repro.spec): S = K+1 proposed tokens enter as
+    one wide teacher-forced chunk — the consecutive-large-matmul shape the
+    paper's FSA scheduling thrives on, instead of K memory-bound 1-token
+    decode steps.  Slot i's rows are scattered at ``write_pos[i] + j`` (its
+    own decode depth, unlike ``prefill_attention``'s batch-static ``start``)
+    and query j attends keys at absolute positions ``<= write_pos[i] + j``.
+    Row j therefore sees exactly the cache a sequential ``decode_attention``
+    step would have seen, so greedy acceptance is lossless.
+
+    ``cache.lengths`` is left untouched: acceptance (and the rollback that
+    truncates rejected suffixes) is decided by the caller once the verify
+    logits are known — see ``repro.spec.verify``.
+    """
+    b, s_new, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q, k_new, v_new = _project_qkv(x, params, cfg, positions)
+
+    slot = jnp.arange(b)[:, None]  # [B, 1]
+    rows = write_pos[:, None] + jnp.arange(s_new)[None, :]  # [B, S]
+    if get_quant(cfg).quantized_kv:
+        # Same per-token/head quantize-on-write as the decode scatter, so
+        # accepted rows are byte-identical to sequential decode's writes.
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        new_cache = QuantKVCache(
+            k=cache.k.at[slot, rows].set(kq, mode="drop"),
+            v=cache.v.at[slot, rows].set(vq, mode="drop"),
+            k_scale=cache.k_scale.at[slot, rows].set(ks, mode="drop"),
+            v_scale=cache.v_scale.at[slot, rows].set(vs, mode="drop"),
+            lengths=cache.lengths,
+        )
+        k = dequantize_kv(new_cache.k, new_cache.k_scale)
+        v = dequantize_kv(new_cache.v, new_cache.v_scale)
+    else:
+        k = cache.k.at[slot, rows].set(k_new.astype(cache.k.dtype), mode="drop")
+        v = cache.v.at[slot, rows].set(v_new.astype(cache.v.dtype), mode="drop")
+        new_cache = KVCache(k=k, v=v, lengths=cache.lengths)
+
+    # Same grouped-einsum formulation (and fp32 softmax) as
+    # ``decode_attention``, widened from 1 query to S — the mask reduces to
+    # decode's ``key <= lengths`` row by row, which is what keeps verify
+    # argmax-identical to the sequential decode it replaces.
+    rep = cfg.num_heads // cfg.num_kv_heads
+    qg = q.reshape(b, s_new, cfg.num_kv_heads, rep, hd).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k.astype(jnp.float32)) * scale
+    valid = (
+        jnp.arange(k.shape[1])[None, None, None, None, :]
+        <= rows[:, None, None, :, None]
+    )
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhrqk,bkhd->bqhrd", p, v.astype(jnp.float32)).astype(x.dtype)
+    o = o.reshape(b, s_new, cfg.num_heads * hd)
+    return get_quant(cfg).dot(o, params["wo"], "attention"), new_cache
+
+
 def decode_attention(
     x: jax.Array,  # [B, 1, d_model]
     params: dict,

@@ -25,11 +25,13 @@ from repro.dist.collectives import constrain
 from repro.quant import get_quant
 from .attention import (
     KVCache,
+    QuantKVCache,
     attention_forward,
     attention_params,
     decode_attention,
     init_kv_cache,
     prefill_attention,
+    verify_attention,
 )
 from .layers import apply_norm, embed_init, mlp_forward, mlp_params, norm_params
 from .moe import moe_forward, moe_params
@@ -304,7 +306,10 @@ def decode_step(
             hn = apply_norm(h, layer["mlp_norm"], cfg.norm_type)
             quant = get_quant(cfg)
             if cfg.moe is not None:
-                y = moe_forward(hn, layer["moe"], cfg)
+                # dropless: a decode token's routing must not depend on its
+                # lane-mates (dead slots, other slots' depths) — capacity
+                # competition across lanes would break per-slot determinism.
+                y = moe_forward(hn, layer["moe"], cfg, dropless=True)
                 if cfg.moe.dense_residual:
                     y = y + mlp_forward(hn, layer["dense_mlp"], cfg.mlp_type, quant)
             else:
@@ -383,6 +388,95 @@ def decode_step(
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = x @ head
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# speculative verify (K+1 teacher-forced tokens against the live cache)
+# ---------------------------------------------------------------------------
+
+
+def verify_step(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # [B, S] int32: [last sampled token, K draft tokens]
+    cache: Any,  # the *live* decode cache (batch B, capacity max_len)
+    positions: jax.Array,  # [B] int32: per-slot first write position
+) -> tuple[jax.Array, Any]:
+    """Score S teacher-forced tokens per slot in one batched forward.
+
+    The speculative-decoding verify pass (repro.spec): slot i's tokens
+    occupy absolute positions ``positions[i] + [0, S)``; their K/V are
+    written straight into the live decode cache at those per-slot rows and
+    every token attends exactly the prefix a sequential ``decode_step``
+    would have seen, so ``argmax(logits[:, j])`` equals the vanilla greedy
+    token given the prefix plus ``tokens[:, :j+1]``.
+
+    ``cache.lengths`` is *not* advanced here — the caller decides how many
+    proposed tokens survive and truncates via ``rollback_cache``.  Only
+    attention families support this (recurrent Mamba/xLSTM state cannot be
+    rolled back by length truncation).
+    """
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"verify_step requires an attention-family cache (KV rollback); "
+            f"{cfg.family!r} carries recurrent state"
+        )
+    x = params["embed"][tokens]
+    b, s = tokens.shape
+    positions = jnp.asarray(positions, jnp.int32)
+    pos = positions[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]  # [B, S]
+    write_pos = positions
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[..., None], (b, s, 3))
+
+    def body(h, inp):
+        layer, kv = inp
+        hn = apply_norm(h, layer["attn_norm"], cfg.norm_type)
+        a, kv_new = verify_attention(hn, layer["attn"], cfg, kv, pos, write_pos)
+        h = h + a
+        hn = apply_norm(h, layer["mlp_norm"], cfg.norm_type)
+        quant = get_quant(cfg)
+        if cfg.moe is not None:
+            # Same dropless routing as decode_step: verify row j must equal
+            # the decode step it replaces regardless of lane-mates.
+            y = moe_forward(hn, layer["moe"], cfg, dropless=True)
+            if cfg.moe.dense_residual:
+                y = y + mlp_forward(hn, layer["dense_mlp"], cfg.mlp_type, quant)
+        else:
+            y = mlp_forward(hn, layer["mlp"], cfg.mlp_type, quant)
+        return h + y, kv_new
+
+    x, new_cache = jax.lax.scan(
+        body, x, (params["layers"], cache), unroll=cfg.scan_unroll
+    )
+    x = apply_norm(x, params["final_norm"], cfg.norm_type)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    # No logit softcap, matching decode_step: tanh is monotonic, so the
+    # greedy argmax the engine compares/emits is unchanged either way.
+    logits = x @ head
+    return logits, new_cache
+
+
+def rollback_cache(cache: Any, new_lengths: jax.Array) -> Any:
+    """Truncate every slot's cached length to ``new_lengths`` [B].
+
+    Speculative-decoding rejection rollback: rejected suffix rows stay in
+    the buffers but become invisible — every attention read masks keys
+    beyond ``lengths`` and every subsequent write scatters at ``lengths``,
+    so stale rows are never read and are overwritten in place.  Works for
+    both fp32 ``KVCache`` and int8 ``QuantKVCache`` (stacked ``[L, B, ...]``
+    leaves with ``lengths [L, B]``); recurrent-state caches cannot roll
+    back this way and are rejected.
+    """
+    if not isinstance(cache, (KVCache, QuantKVCache)):
+        raise ValueError(
+            "rollback_cache requires a KVCache/QuantKVCache (attention "
+            "families); recurrent state has no length-truncation rollback"
+        )
+    new_lengths = jnp.asarray(new_lengths, jnp.int32)
+    return cache._replace(
+        lengths=jnp.broadcast_to(new_lengths[None, :], cache.lengths.shape)
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -54,12 +54,16 @@ def moe_params(key, cfg: ModelConfig, dtype) -> dict:
 
 
 def _moe_block(x, router, gate, up, down, cfg: ModelConfig,
-               expert_offset, total_tokens_hint=None):
+               expert_offset, total_tokens_hint=None, dropless=False):
     """MoE over a local token block with a local expert slice.
 
     x: [B_loc, S, d]; gate/up/down: [E_loc, ...]; expert_offset: first
     global expert id owned by this rank.  Returns this rank's partial
     output (sum over ranks = full MoE output).
+
+    ``dropless`` sets capacity to the whole token pool, so no copy is ever
+    dropped and each token's output depends only on its own routing — the
+    decode/verify contract (see ``moe_forward``).
     """
     moe = cfg.moe
     b, s, d = x.shape
@@ -67,7 +71,7 @@ def _moe_block(x, router, gate, up, down, cfg: ModelConfig,
     k = moe.top_k
     e = moe.num_experts
     e_loc = gate.shape[0]
-    capacity = max(int(t * k * moe.capacity_factor / e), 1)
+    capacity = t if dropless else max(int(t * k * moe.capacity_factor / e), 1)
 
     xf = x.reshape(t, d)
     logits = xf.astype(jnp.float32) @ router  # router is replicated
@@ -127,15 +131,27 @@ def _moe_block(x, router, gate, up, down, cfg: ModelConfig,
     return y.reshape(b, s, d)
 
 
-def moe_forward(x: jax.Array, params: dict, cfg: ModelConfig) -> jax.Array:
-    """x: [B, S, d] -> [B, S, d]."""
+def moe_forward(
+    x: jax.Array, params: dict, cfg: ModelConfig, dropless: bool = False
+) -> jax.Array:
+    """x: [B, S, d] -> [B, S, d].
+
+    ``dropless=True`` is the decode-side mode (single-token decode and the
+    speculative verify pass): expert capacity equals the token pool, so no
+    token is ever dropped and routing is per-token independent.  That
+    independence is what makes a token's logits identical whether it runs
+    in a [B, 1] decode step or a [B, K+1] verify chunk, whatever its
+    lane-mates are — the engine's token-equivalence contract for MoE.
+    Train/prefill keep the capacity-bounded EP semantics (the drop is the
+    compute-efficiency feature there).
+    """
     moe = cfg.moe
     names = _ambient_axis_names()
     if "model" not in names:
         # Single-shard path (unit tests / CPU smoke): all experts local.
         return _moe_block(
             x, params["router"], params["gate"], params["up"], params["down"],
-            cfg, expert_offset=0,
+            cfg, expert_offset=0, dropless=dropless,
         ).astype(x.dtype)
 
     daxes = tuple(a for a in DATA_AXES if a in names)
@@ -160,7 +176,7 @@ def moe_forward(x: jax.Array, params: dict, cfg: ModelConfig) -> jax.Array:
             down_b = jax.lax.all_gather(down_b, "data", axis=1, tiled=True)
         y = _moe_block(
             x_b, router_b, gate_b, up_b, down_b, cfg,
-            expert_offset=rank * e_loc,
+            expert_offset=rank * e_loc, dropless=dropless,
         )
         # Sum partial expert contributions across EP ranks (row-parallel
         # combine; tokens are replicated over 'model').

@@ -19,6 +19,13 @@ Requests flow through three separated phases, each a reused jit executable:
 The engine is family-agnostic (dense/MoE/VLM use the flash prefill path;
 hybrid/SSM teacher-force under one ``lax.scan``) and optionally shards the
 decode cache over an ambient mesh via ``repro.dist.sharding``.
+
+With ``spec=SpecConfig(...)`` (repro.spec) the generate phase runs
+speculatively: a draft model proposes K greedy tokens per slot, the target
+verifies all of them in one wide teacher-forced forward against the live
+cache, and rejected suffixes roll back by per-slot length truncation.
+Greedy outputs stay token-identical to vanilla decode — only the step
+count changes.
 """
 
 from __future__ import annotations
@@ -44,11 +51,16 @@ class Request:
     # is ambiguous") for distinct same-length prompts.  Requests are
     # identity-equal; `rid` is the stable external key.
     rid: int
-    prompt: np.ndarray  # [len] int32
+    prompt: np.ndarray  # [len] int32 (lists/other int dtypes are coerced)
     max_new_tokens: int = 16
     eos_id: int = -1  # -1: never
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
+
+    def __post_init__(self):
+        # Callers naturally pass Python lists; everything downstream
+        # (shape-based bucketing, pad copies) needs ndarray semantics.
+        self.prompt = np.asarray(self.prompt, dtype=np.int32)
 
 
 def default_buckets(max_len: int, lo: int = 16) -> tuple[int, ...]:
@@ -77,6 +89,8 @@ class ServeEngine:
         prefill_buckets: Optional[tuple[int, ...]] = None,
         sampling: Optional[SamplingConfig] = None,
         mesh=None,
+        spec=None,  # Optional[repro.spec.SpecConfig]: speculative decoding
+        draft_params=None,  # draft model params (self-draft reuses `params`)
     ):
         assert cfg.family != "encoder", "encoder archs have no decode phase"
         self.cfg, self.params = cfg, params
@@ -100,6 +114,38 @@ class ServeEngine:
         self._prefill_idx = 0
         self._base_key = jax.random.PRNGKey(self.sampling.seed)
         self.stats = {"prefill_calls": 0, "insert_calls": 0, "decode_steps": 0}
+
+        # -- speculative decoding (repro.spec): draft worker + verify jit --
+        self.spec = spec
+        self.draft = None
+        if spec is not None:
+            # Imported lazily: repro.spec pulls in repro.serve.serve_step,
+            # so a module-level import here would be circular.
+            from repro.spec import DraftWorker, make_spec_verify, resolve_draft_config
+
+            if not self.sampling.greedy:
+                raise ValueError(
+                    "speculative decoding requires greedy sampling "
+                    "(lossless greedy acceptance)"
+                )
+            self.draft_cfg = resolve_draft_config(spec, cfg)
+            if draft_params is None:
+                if spec.draft_arch is not None:
+                    raise ValueError(
+                        "draft_params is required when draft_arch names a "
+                        "distinct model"
+                    )
+                draft_params = params  # self-draft
+            self.draft = DraftWorker(
+                self.draft_cfg, draft_params,
+                batch_size=batch_size, max_len=max_len,
+                prefill_chunk=prefill_chunk,
+            )
+            self._verify_jit = jax.jit(make_spec_verify(cfg))
+            self.stats.update(
+                verify_steps=0, draft_steps=0,
+                proposed_tokens=0, accepted_tokens=0,
+            )
 
         scfg = self.sampling
 
@@ -135,11 +181,20 @@ class ServeEngine:
 
     def compile_counts(self) -> dict:
         """Executables compiled so far, per phase."""
-        return {
+        counts = {
             "prefill": self._prefill_jit._cache_size(),
             "insert": self._insert_jit._cache_size(),
             "generate": self._decode_jit._cache_size(),
         }
+        if self.draft is not None:
+            counts["verify"] = self._verify_jit._cache_size()
+            counts.update(self.draft.compile_counts())
+        return counts
+
+    def acceptance_rate(self) -> float:
+        """Fraction of proposed draft tokens the target accepted."""
+        proposed = self.stats.get("proposed_tokens", 0)
+        return self.stats["accepted_tokens"] / proposed if proposed else 0.0
 
     # -- request intake -----------------------------------------------------
 
@@ -221,12 +276,25 @@ class ServeEngine:
                     self._done.append(req)
                 else:
                     self.slots[i] = req
+                    if self.draft is not None:
+                        # Mirror the insert into the draft's slot pool so
+                        # its context matches the target's from round one.
+                        self.draft.prefill_into_slot(
+                            req.prompt, i, self._bucket_for(len(req.prompt))
+                        )
 
         live = [i for i in range(self.batch) if self.slots[i] is not None]
         if not live:
             return bool(self.queue)
 
-        # Generate phase: one batched decode step for all slots.
+        if self.draft is not None:
+            self._spec_generate(live)
+        else:
+            self._generate(live)
+        return bool(self.queue or any(r is not None for r in self.slots))
+
+    def _generate(self, live: list) -> None:
+        """Vanilla generate: one batched decode step, one token per slot."""
         args = (
             self.params,
             self.cache,
@@ -256,7 +324,58 @@ class ServeEngine:
                 self._retire(i)
             else:
                 self._next_tok[i] = tok
-        return bool(self.queue or any(r is not None for r in self.slots))
+
+    def _spec_generate(self, live: list) -> None:
+        """Speculative generate: K draft steps + one wide verify pass.
+
+        Emits between 1 and K+1 tokens per live slot per round.  The
+        emitted tokens are always the target's own greedy continuation
+        (``repro.spec.verify``), so the output stream is token-identical
+        to ``_generate``'s — speculation changes step count, never tokens.
+        """
+        k = self.spec.lookahead
+        drafts = self.draft.propose(self._next_tok, k)  # [B, K]
+        tokens = np.concatenate(
+            [self._next_tok[:, None], drafts], axis=1
+        ).astype(np.int32)
+        with self._mesh_ctx():
+            greedy, accepted, self.cache = self._verify_jit(
+                self.params, self.cache,
+                jnp.asarray(tokens), jnp.asarray(self._positions),
+            )
+        greedy, accepted = np.asarray(greedy), np.asarray(accepted)
+        self.stats["verify_steps"] += 1
+        self.stats["draft_steps"] += k + 1
+        self._step_idx += 1
+
+        # Post-verify lengths (the in-jit rollback already clamped
+        # ``accepted`` to cache capacity); the draft mirrors them so both
+        # caches hold exactly the accepted prefix next round.
+        new_lengths = self._positions + accepted + 1
+
+        for i in live:
+            req = self.slots[i]
+            pos0 = int(self._positions[i])
+            n = int(accepted[i])
+            self.stats["proposed_tokens"] += k
+            self.stats["accepted_tokens"] += n
+            # Consume the emitted run token by token, applying the same
+            # retirement rules (EOS / max_new_tokens / capacity) at the
+            # same points vanilla decode would.
+            for j in range(n + 1):
+                tok = int(greedy[i, j])
+                req.output.append(tok)
+                self._positions[i] = pos0 + j + 1
+                if (
+                    tok == req.eos_id
+                    or len(req.output) >= req.max_new_tokens
+                    or pos0 + j + 1 >= self.max_len
+                ):
+                    self._retire(i)
+                    break
+            else:
+                self._next_tok[i] = int(greedy[i, n])
+        self.draft.rollback(new_lengths)
 
     def run(self, max_steps: int = 100_000) -> list[Request]:
         """Drain the queue; returns completed requests."""

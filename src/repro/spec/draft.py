@@ -1,0 +1,117 @@
+"""The draft side of speculative decoding: a small model whose cache
+mirrors the engine's slot lifecycle.
+
+The ``DraftWorker`` owns a second, parallel decode cache over the same
+slot pool as the target engine: every target prefill/insert is mirrored
+here (same bucket padding, same slot), every verify round rolls the draft
+back to the target's accepted length.  The invariant maintained across
+rounds is that draft ``lengths[i]`` always equals the target's — the draft
+has cached exactly the tokens the target accepted — so a round's proposals
+start from a synchronized context.
+
+Per round the draft runs K+1 greedy decode steps, not K: the last step
+feeds the final proposal ``d_K`` back in (its sampled token is discarded)
+purely to write ``d_K``'s K/V.  That keeps the cache dense through
+position ``pos + K``, so a fully-accepted round needs no special-case
+catch-up next round — rollback to ``pos + K + 1`` always lands on rows
+that exist, and self-draft acceptance stays exactly 1.0.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import init_cache, insert_cache, prefill_step, rollback_cache
+from repro.serve.serve_step import make_decode_step
+
+
+class DraftWorker:
+    """Draft-model proposer with a mirrored per-slot decode cache."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        batch_size: int,
+        max_len: int,
+        prefill_chunk: Optional[int] = None,
+    ):
+        self.cfg, self.params = cfg, params
+        self.batch, self.max_len = batch_size, max_len
+        self.prefill_chunk = prefill_chunk
+        self.cache = None
+        self._positions = np.zeros(batch_size, np.int32)
+
+        def _prefill(params, tokens, true_len):
+            bucket = tokens.shape[1]
+            cache = init_cache(cfg, 1, bucket)
+            _, cache = prefill_step(
+                params, cfg, tokens, cache,
+                jnp.reshape(true_len, (1,)),
+                chunk_size=self.prefill_chunk,
+            )
+            # The draft's prefill logits are discarded: the first decode
+            # token always comes from the *target's* prefill.
+            return cache
+
+        def _insert(cache, prefix, slot):
+            return insert_cache(cache, prefix, slot)
+
+        def _rollback(cache, new_lengths):
+            return rollback_cache(cache, new_lengths)
+
+        self._prefill_jit = jax.jit(_prefill)
+        self._insert_jit = jax.jit(_insert)
+        self._decode_jit = jax.jit(make_decode_step(cfg))  # greedy 4-arg
+        self._rollback_jit = jax.jit(_rollback)
+
+    def compile_counts(self) -> dict:
+        return {
+            "draft_prefill": self._prefill_jit._cache_size(),
+            "draft_insert": self._insert_jit._cache_size(),
+            "draft_generate": self._decode_jit._cache_size(),
+        }
+
+    def ensure_cache(self) -> None:
+        if self.cache is None:
+            self.cache = init_cache(self.cfg, self.batch, self.max_len)
+
+    def prefill_into_slot(self, prompt: np.ndarray, slot: int, bucket: int) -> None:
+        """Mirror the target's prefill+insert for ``slot`` (same bucket)."""
+        self.ensure_cache()
+        plen = len(prompt)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = prompt
+        prefix = self._prefill_jit(
+            self.params, jnp.asarray(toks), jnp.asarray(plen, jnp.int32)
+        )
+        self.cache = self._insert_jit(
+            self.cache, prefix, jnp.asarray(slot, jnp.int32)
+        )
+        self._positions[slot] = plen
+
+    def propose(self, next_tok: np.ndarray, k: int) -> np.ndarray:
+        """K greedy draft tokens per slot, [B, K] — plus one extra decode
+        step that writes the last proposal's K/V (token discarded)."""
+        tok = jnp.asarray(next_tok.reshape(-1, 1).astype(np.int32))
+        drafts = []
+        for j in range(k + 1):
+            tok, _, self.cache = self._decode_jit(
+                self.params, self.cache, tok, jnp.asarray(self._positions + j)
+            )
+            if j < k:
+                drafts.append(np.asarray(tok)[:, 0])
+        self._positions += k + 1
+        return np.stack(drafts, axis=1)
+
+    def rollback(self, new_lengths: np.ndarray) -> None:
+        """Truncate to the target's accepted lengths after a verify round."""
+        new_lengths = new_lengths.astype(np.int32)
+        self.cache = self._rollback_jit(self.cache, jnp.asarray(new_lengths))
+        self._positions = new_lengths.copy()

@@ -1,0 +1,53 @@
+"""The batched verify pass: score K drafts per slot, accept, roll back.
+
+One jit call per round replaces up to K+1 sequential target decode steps —
+the K small interleaved matmuls the paper says starve a systolic array
+become one wide teacher-forced forward (``repro.models.verify_step``),
+exactly the consecutive-large-matmul shape the FSA schedule (and the
+chunked flash prefill path) is built for.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import rollback_cache, verify_step
+
+
+def make_spec_verify(cfg: ModelConfig):
+    """Build the engine's verify closure.
+
+    ``spec_verify(params, cache, tokens [B, K+1], positions [B])`` returns
+
+      * ``greedy [B, K+1]`` — the target's greedy token at every verified
+        position (``greedy[:, j]`` is the argmax given the cached prefix
+        plus ``tokens[:, :j+1]``);
+      * ``accepted [B]`` — per slot, the length of the longest draft prefix
+        the target agrees with (0..K), capped so the emitted run never
+        outgrows the cache capacity;
+      * the cache with all K+1 rows written and ``lengths`` rolled back to
+        ``positions + accepted + 1`` — accepted rows kept, rejected suffix
+        truncated.
+
+    Greedy acceptance makes losslessness structural: an accepted draft
+    ``tokens[:, j+1]`` *equals* ``greedy[:, j]``, so the emitted stream
+    ``greedy[:, :accepted+1]`` is the target's own greedy continuation —
+    token-identical to vanilla decode no matter what the draft proposed.
+    """
+
+    def spec_verify(params, cache, tokens, positions):
+        logits, cache = verify_step(params, cfg, tokens, cache, positions)
+        greedy = jnp.argmax(logits.astype(jnp.float32), axis=-1).astype(jnp.int32)
+        # accepted = longest prefix with draft[j] == greedy[j]; cumprod
+        # zeroes everything after the first mismatch.
+        match = (greedy[:, :-1] == tokens[:, 1:]).astype(jnp.int32)
+        accepted = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+        max_len = cache.k.shape[2]  # [L, B, max_len, ...]
+        cap = jnp.maximum(max_len - positions - 1, 0)
+        accepted = jnp.minimum(accepted, cap)
+        cache = rollback_cache(cache, positions + accepted + 1)
+        return greedy, accepted, cache
+
+    return spec_verify
