@@ -9,9 +9,13 @@ directory — ``BENCH_serve.json`` (continuous-batching decode tokens/s),
 ``BENCH_flash.json`` (flash attention fwd/bwd FLOPs/s vs references),
 ``BENCH_quant.json`` (int8 decode throughput, KV-cache footprint and
 greedy fidelity), ``BENCH_spec.json`` (speculative decoding acceptance
-rate and target-step reduction) and ``BENCH_train.json`` (train-step
-steps/s and tokens/s) — CI uploads them as workflow artifacts so
-throughput is tracked per commit.
+rate and target-step reduction), ``BENCH_train.json`` (train-step
+steps/s and tokens/s) and ``BENCH_tune.json`` (design-space autotune
+Pareto frontier + paper cross-checks, with ``tune_report.md``) — CI
+uploads them as workflow artifacts so throughput is tracked per commit.
+
+``--only NAME`` (repeatable) runs a subset, e.g.
+``python -m benchmarks.run --only tune``.
 
 Roofline terms per (arch x mesh) come from the compiled dry-run
 (launch/dryrun.py + launch/roofline.py), not from here — this harness is
@@ -20,6 +24,7 @@ CPU-runnable paper-claim reproduction.
 
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
@@ -37,6 +42,7 @@ def main() -> None:
         table2_accuracy,
         table3_area,
         train_bench,
+        tune_bench,
     )
 
     modules = [
@@ -51,7 +57,21 @@ def main() -> None:
         ("quant", quant_bench),
         ("spec", spec_bench),
         ("train", train_bench),
+        ("tune", tune_bench),
     ]
+
+    ap = argparse.ArgumentParser(description="paper-claim benchmark harness")
+    ap.add_argument(
+        "--only",
+        action="append",
+        metavar="NAME",
+        choices=[name for name, _ in modules],
+        help="run only the named benchmark(s); repeatable",
+    )
+    args = ap.parse_args()
+    if args.only:
+        modules = [(name, mod) for name, mod in modules if name in args.only]
+
     csv_rows: list[tuple[str, float, str]] = []
     failed = []
     for name, mod in modules:

@@ -27,7 +27,10 @@ def _flatten(obj, prefix=""):
             rows.extend(_flatten(v, key))
         elif isinstance(v, (int, float, bool, str)):
             rows.append((key, v))
-        # lists (if any) are detail payloads, not summary metrics
+        elif isinstance(v, list):
+            # Lists are detail payloads (e.g. the BENCH_tune.json Pareto
+            # frontier); summarize their size, not their contents.
+            rows.append((f"{key}.n", len(v)))
     return rows
 
 

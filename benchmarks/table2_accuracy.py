@@ -37,18 +37,13 @@ def run(csv_rows: list) -> dict:
         q = _draw(rng, (seq, D)).astype(np.float16)
         k = _draw(rng, (seq, D)).astype(np.float16)
         v = _draw(rng, (seq, D)).astype(np.float16)
-        qj = jnp.asarray(q, jnp.float32)[None, :, None, :].transpose(0, 1, 2, 3)
+        qj = jnp.asarray(q, jnp.float32)[None, :, None, :]  # [1, seq, 1, D]
         kj = jnp.asarray(k, jnp.float32)[None, :, None, :]
         vj = jnp.asarray(v, jnp.float32)[None, :, None, :]
         t0 = time.perf_counter()
-        approx = systolic_attention(
-            qj.reshape(1, seq, 1, D), kj.reshape(1, seq, 1, D), vj.reshape(1, seq, 1, D),
-            exp2_impl="pwl",
-        )[0, :, 0, :]
+        approx = systolic_attention(qj, kj, vj, exp2_impl="pwl")[0, :, 0, :]
         us = (time.perf_counter() - t0) * 1e6
-        exact = naive_attention(
-            qj.reshape(1, seq, 1, D), kj.reshape(1, seq, 1, D), vj.reshape(1, seq, 1, D),
-        )[0, :, 0, :]
+        exact = naive_attention(qj, kj, vj)[0, :, 0, :]
         diff = np.asarray(approx, np.float64) - np.asarray(exact, np.float64)
         denom = np.abs(np.asarray(exact, np.float64)) + 1e-9
         stats = {

@@ -25,6 +25,7 @@ def fsa_flash_attention(
     num_segments: int = 8,
     spad_bytes: int = 192 * 1024,
     accum_bytes: int | None = None,
+    single_direction: bool = False,
 ) -> F.KernelResult:
     """Run one attention head through the FSA simulator; returns KernelResult.
 
@@ -43,7 +44,8 @@ def fsa_flash_attention(
         accum_bytes = d * br * 4 + br * 4
 
     @F.kernel(array_n=array_n, num_segments=num_segments,
-              spad_bytes=spad_bytes, accum_bytes=accum_bytes)
+              spad_bytes=spad_bytes, accum_bytes=accum_bytes,
+              single_direction=single_direction)
     def attention(Q: F.MTile, K: F.MTile, Vt: F.MTile) -> F.MTile:
         Ot = F.alloc_mem((d, seq), np.float32, name="Ot")
         Ot_tiles = Ot.split(br, dim=-1)     # [d, br]

@@ -165,10 +165,8 @@ def store_tile(src: ATile, dst: MTile) -> None:
 # -- compute instructions ---------------------------------------------------------
 
 def _advance(op: str) -> None:
-    from .fsa_sim import _COMPUTE_STAGGER
-
     dev = _ctx().device
-    dev.compute_cycles += _COMPUTE_STAGGER[op](dev.n)
+    dev.compute_cycles += dev.stagger_cycles(op)
     dev.cycles = dev.compute_cycles
     dev.instr_count += 1
 

@@ -75,12 +75,14 @@ class FSADevice:
         accum_bytes: int = 64 * 1024,
         num_segments: int = 8,
         freq_ghz: float = 1.5,
+        single_direction: bool = False,
     ):
         self.n = array_n
         self.spad_bytes = spad_bytes
         self.accum_bytes = accum_bytes
         self.num_segments = num_segments
         self.freq_ghz = freq_ghz
+        self.single_direction = single_direction
         self.reset()
 
     def reset(self) -> None:
@@ -113,6 +115,18 @@ class FSADevice:
 
     # -- execution -----------------------------------------------------------
 
+    def stagger_cycles(self, op: str) -> int:
+        """Cycles the timeline advances when ``op`` issues behind its
+        predecessor on the dual-FSM controller (§4.3)."""
+        stagger = _COMPUTE_STAGGER[op](self.n)
+        if self.single_direction and op == "attn_score":
+            # §8.2 area-optimized variant: no upward-path registers, so S
+            # drains through the bottom and the score pass cannot overlap
+            # the preceding preload — one inner iteration becomes 6N + 10
+            # instead of 5N + 10.
+            stagger += self.n
+        return stagger
+
     def run(self, program: FSAProgram) -> None:
         prev_compute = None
         for ins in program.instrs:
@@ -124,8 +138,7 @@ class FSADevice:
                 # issued as soon as its data dependency inside the array is
                 # met, so the timeline advances by the *stagger* of each
                 # instruction, not its full latency.
-                stagger = _COMPUTE_STAGGER[ins.op](self.n)
-                self.compute_cycles += stagger
+                self.compute_cycles += self.stagger_cycles(ins.op)
                 prev_compute = ins.op
         # Drain the last instruction's tail through the array.
         if prev_compute is not None:

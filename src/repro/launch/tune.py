@@ -1,0 +1,64 @@
+"""FSA design-space autotune launcher.
+
+  PYTHONPATH=src python -m repro.launch.tune --preset smoke --seed 0 \
+      --out tune_report.md --json BENCH_tune.json
+
+Runs the ``repro.tune`` subsystem end to end: builds the preset's design
+space, evaluates it sharded over the local device mesh (8 virtual CPU
+devices in CI), extracts the Pareto frontier over (TFLOP/s, area, Table 2
+error), cross-checks the evaluators against the paper's published numbers
+and spot-checks frontier points through the instruction-level simulator.
+Deterministic given ``--seed``: re-running regenerates byte-identical
+JSON.
+
+  --preset paper|smoke|ci|full   design space (paper = the single
+                                 published point, i.e. Fig. 11 + Table 2
+                                 + Table 3 as the special case)
+  --search grid|random|sha       exhaustive sweep / random sample /
+                                 successive halving (multi-fidelity)
+  --no-mesh                      evaluate on one device (no shard_map)
+  --accuracy-seq N               override the Table 2 protocol length
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="smoke",
+                    choices=("paper", "smoke", "ci", "full"))
+    ap.add_argument("--search", default="grid", choices=("grid", "random", "sha"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--points", type=int, default=32,
+                    help="sample size for --search random")
+    ap.add_argument("--accuracy-seq", type=int, default=None)
+    ap.add_argument("--paper-check-seq", type=int, default=2048)
+    ap.add_argument("--sim-checks", type=int, default=3)
+    ap.add_argument("--no-mesh", action="store_true")
+    ap.add_argument("--out", default="tune_report.md", help="markdown report path")
+    ap.add_argument("--json", default="BENCH_tune.json", help="JSON payload path")
+    args = ap.parse_args()
+
+    from repro.tune import render_markdown, run_tune, write_report
+
+    report = run_tune(
+        args.preset,
+        search=args.search,
+        seed=args.seed,
+        mesh=not args.no_mesh,
+        num_points=args.points,
+        accuracy_seq=args.accuracy_seq,
+        paper_check_seq=args.paper_check_seq,
+        sim_check_count=args.sim_checks,
+    )
+    write_report(report, md_path=args.out, json_path=args.json)
+    print(render_markdown(report))
+    print(f"wrote {args.out} and {args.json}")
+    if not (report["paper_checks_ok"] and report["sim_checks_ok"]):
+        raise SystemExit("paper/sim cross-checks FAILED — see report")
+
+
+if __name__ == "__main__":
+    main()

@@ -62,6 +62,41 @@ def test_table2_distribution_error_envelope():
         assert mae < 3.4e-2
 
 
+@pytest.mark.parametrize("array_n", [32, 64])
+def test_cycle_counts_at_nondefault_array_sizes(array_n):
+    """The §3.5 closed forms hold for any N, not just the paper's 128."""
+    rng = np.random.default_rng(4)
+    seq = 4 * array_n  # Tr = Tc = 4
+    q, k, v = (
+        rng.standard_normal((seq, array_n)).astype(np.float16) for _ in range(3)
+    )
+    res = fsa_flash_attention(q, k, v, array_n=array_n)
+    tiles = (seq // array_n) ** 2
+    outer = seq // array_n
+    assert res.cycles == tiles * (5 * array_n + 10) + outer * (2 * array_n + 20)
+    assert res.cycles == fsa_attention_cycles(seq, array_n, array_n)
+    mae = np.abs(res.output - _exact_attention(q, k, v)).mean()
+    assert mae < 2e-3
+
+
+def test_single_direction_schedule_cycles_and_numerics():
+    """§8.2 variant on the simulator: 6N + 10 per inner tile, same outputs.
+
+    The schedule only changes *when* instructions issue (no upward-path
+    registers, so AttnScore cannot overlap the preceding preload), not what
+    they compute — outputs must be bit-identical to the standard schedule.
+    """
+    rng = np.random.default_rng(5)
+    n, seq = 128, 256
+    q, k, v = (rng.standard_normal((seq, n)).astype(np.float16) for _ in range(3))
+    std = fsa_flash_attention(q, k, v)
+    single = fsa_flash_attention(q, k, v, single_direction=True)
+    tiles = (seq // n) ** 2
+    assert single.cycles == fsa_attention_cycles(seq, n, single_direction=True)
+    assert single.cycles == std.cycles + tiles * n
+    np.testing.assert_array_equal(std.output, single.output)
+
+
 def test_scratchpad_capacity_enforced():
     dev = FSADevice(spad_bytes=1024)
     dev.alloc("spad", "a", (16, 16), np.float16)  # 512 B

@@ -19,6 +19,15 @@ def test_matmul_cycles_section22():
     assert matmul_cycles(1024, 128) == 1024 + 3 * 128 - 1
 
 
+def test_matmul_cycles_degenerate_shapes():
+    """The M + 3N - 1 pipeline formula holds at the degenerate extremes."""
+    # A single moving column still pays the full 3N - 1 fill/drain latency.
+    assert matmul_cycles(1, 128) == 3 * 128
+    assert matmul_cycles(1, 1) == 3  # 1x1 array, one column: 1 + 3 - 1
+    # A 1-wide array is a dot-product pipe: M columns + 2 cycles of skew.
+    assert matmul_cycles(4096, 1) == 4096 + 2
+
+
 def test_tile_cycle_formulas():
     for n in (64, 128, 256):
         assert fsa_tile_cycles(n) == 5 * n + 10
@@ -59,3 +68,18 @@ def test_attention_flops_formula():
 def test_whole_head_cycles():
     # Tr = Tc = 2: 4 inner tiles + 2 rescales.
     assert fsa_attention_cycles(256) == 4 * (5 * 128 + 10) + 2 * (2 * 128 + 20)
+
+
+def test_whole_head_cycles_single_direction():
+    """§8.2 variant: inner tiles cost 6N + 10; the epilogue is unchanged."""
+    assert fsa_attention_cycles(256, single_direction=True) == 4 * (
+        6 * 128 + 10
+    ) + 2 * (2 * 128 + 20)
+    # The variant is exactly Tr*Tc*N cycles slower than the standard schedule.
+    for seq in (256, 1024):
+        tiles = (seq // 128) ** 2
+        assert (
+            fsa_attention_cycles(seq, single_direction=True)
+            - fsa_attention_cycles(seq)
+            == tiles * 128
+        )

@@ -1,0 +1,329 @@
+"""repro.tune — design-space autotuner tests.
+
+Pins the acceptance surface of the subsystem: Table 1 capacity
+validation, evaluators reproducing the paper's Fig. 11 / Table 2 /
+Table 3 numbers at the paper's design point, mesh-sharded sweeps
+(per-device shard counts + equality with the host evaluators), the
+deterministic search drivers, Pareto extraction, and the end-to-end
+report with its fsa_sim cycle cross-checks.
+"""
+
+import dataclasses
+import json
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    )
+
+import numpy as np
+import pytest
+
+from repro.core.fsa_flash import fsa_flash_attention
+from repro.tune import (
+    PAPER_TARGETS,
+    DesignPoint,
+    dominates,
+    evaluate,
+    exact_fit_point,
+    grid_space,
+    grid_sweep,
+    paper_point,
+    pareto_front,
+    quantized_systolic_attention,
+    random_search,
+    run_tune,
+    render_markdown,
+    successive_halving,
+    tune_mesh,
+    write_report,
+)
+from repro.tune.design import accum_required_bytes, spad_required_bytes
+
+
+# ---------------------------------------------------------------------------
+# DesignPoint / capacity model
+# ---------------------------------------------------------------------------
+
+def test_design_point_frozen_hashable():
+    p = paper_point()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        p.array_n = 64
+    assert len({p, DesignPoint(), DesignPoint(array_n=64)}) == 2
+
+
+def test_paper_point_is_exact_fit_sram():
+    """Table 1: 192 KiB spad / 64 KiB accum are exactly the N=128 working set."""
+    p = paper_point()
+    assert p.spad_bytes == spad_required_bytes(128) == 192 * 1024
+    assert p.accum_bytes == accum_required_bytes(128) == 64 * 1024
+    p.validate()
+
+
+@pytest.mark.parametrize(
+    "kwargs",
+    [
+        dict(spad_kib=191),            # 1 KiB short of the working set
+        dict(accum_kib=63),
+        dict(array_n=96),              # not a power of two
+        dict(pwl_segments=6),
+        dict(pwl_segments=128),
+        dict(schedule="triple"),
+        dict(freq_ghz=10.0),
+    ],
+)
+def test_invalid_points_rejected(kwargs):
+    p = DesignPoint(**kwargs)
+    assert not p.is_valid()
+    with pytest.raises(ValueError):
+        p.validate()
+
+
+def test_exact_fit_point_scales_with_n():
+    for n in (32, 64, 256):
+        p = exact_fit_point(n)
+        p.validate()
+        assert p.spad_bytes == spad_required_bytes(n)
+        assert p.accum_bytes == accum_required_bytes(n)
+        # One KiB less on either SRAM breaks validity.
+        assert not dataclasses.replace(p, spad_kib=p.spad_kib - 1).is_valid()
+        assert not dataclasses.replace(p, accum_kib=p.accum_kib - 1).is_valid()
+
+
+# ---------------------------------------------------------------------------
+# Evaluators vs the paper's published numbers
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def paper_record():
+    return evaluate(paper_point(), accuracy_seq=2048)
+
+
+def test_paper_point_reproduces_fig11(paper_record):
+    assert paper_record["speedup_vs_tpu_v5e"] == pytest.approx(1.77, rel=0.01)
+    assert paper_record["speedup_vs_neuron_v2"] == pytest.approx(4.83, rel=0.01)
+    assert 0.35 < paper_record["mean_util"] < 0.45
+
+
+def test_paper_point_reproduces_table3(paper_record):
+    assert paper_record["array_um2"] == pytest.approx(
+        PAPER_TARGETS["area_total_um2"], rel=1e-6
+    )
+    assert paper_record["overhead_pct"] == pytest.approx(12.07, abs=0.01)
+    # §8.2: the single-direction variant drops the upward-path registers.
+    single = evaluate(
+        dataclasses.replace(paper_point(), schedule="single_direction"),
+        accuracy_seq=256,
+    )
+    assert single["array_um2"] < paper_record["array_um2"]
+    assert single["overhead_pct"] < paper_record["overhead_pct"]
+    assert single["mean_util"] < paper_record["mean_util"]
+
+
+def test_paper_point_reproduces_table2_and_fig12(paper_record):
+    # Fig. 12 sharp check at the 8-segment setting.
+    assert paper_record["pwl_mre"] == pytest.approx(0.02728, rel=0.05)
+    # Table 2 envelope (our sim keeps fp32 partial sums, so absolute errors
+    # are below the paper's RTL; the published envelope is the bound).
+    assert paper_record["acc_mae"] <= PAPER_TARGETS["table2_mae_envelope"]
+    assert paper_record["acc_mre"] <= PAPER_TARGETS["table2_mre_envelope"]
+    # Fewer segments must be measurably worse end to end.
+    coarse = evaluate(
+        dataclasses.replace(paper_point(), pwl_segments=2), accuracy_seq=2048
+    )
+    assert coarse["acc_mre"] > 2 * paper_record["acc_mre"]
+    assert coarse["pwl_mre"] > paper_record["pwl_mre"]
+
+
+@pytest.mark.parametrize("array_n,seq", [(64, 128), (128, 256)])
+def test_accuracy_twin_matches_instruction_sim(array_n, seq):
+    """quantized_systolic_attention is the same arithmetic as fsa_sim."""
+    rng = np.random.default_rng(5)
+    q, k, v = (
+        rng.standard_normal((seq, array_n)).astype(np.float16) for _ in range(3)
+    )
+    twin = quantized_systolic_attention(q, k, v, array_n=array_n, num_segments=8)
+    sim = fsa_flash_attention(
+        q, k, v, array_n=array_n,
+        spad_bytes=spad_required_bytes(array_n),
+        accum_bytes=accum_required_bytes(array_n) + 4 * array_n,
+    )
+    assert np.abs(twin - sim.output).max() < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded sweep
+# ---------------------------------------------------------------------------
+
+def test_grid_sweep_shards_over_8_devices():
+    import jax
+
+    assert len(jax.devices()) == 8, "suite requires the 8-device CPU host"
+    points = grid_space(
+        array_ns=(64, 128), segments=(4, 8), sram_overs=(1, 2), freqs=(1.0, 1.5)
+    )
+    assert len(points) == 32
+    mesh = tune_mesh()
+    res = grid_sweep(points, mesh=mesh, accuracy_seq=256)
+    # Every device evaluated exactly its shard of the space.
+    assert res.per_device_counts == [4] * 8
+    assert sum(res.per_device_counts) == len(points)
+
+
+def test_grid_sweep_pads_ragged_spaces():
+    points = grid_space(array_ns=(64, 128), segments=(4, 8, 16))[:11]
+    res = grid_sweep(points, mesh=tune_mesh(), accuracy_seq=256)
+    # 11 points pad to 16 rows (2 per device); the pad rows are masked out
+    # of the valid counts, which must sum to exactly the real point count.
+    assert sum(res.per_device_counts) == 11
+    assert all(c <= 2 for c in res.per_device_counts)
+    assert len(res.records) == 11
+
+
+def test_mesh_sweep_matches_host_evaluators():
+    """The jnp shard_map evaluator == the scalar host evaluators."""
+    points = grid_space(
+        array_ns=(64, 128, 256), segments=(4, 8),
+        sram_overs=(1, 2), freqs=(1.0, 1.5),
+    )
+    res = grid_sweep(points, mesh=tune_mesh(), accuracy_seq=256)
+    for point, rec in zip(points, res.records):
+        host = evaluate(point, accuracy_seq=256)
+        for key in (
+            "mean_util", "mean_tflops", "total_um2", "overhead_pct",
+            "speedup_vs_tpu_v5e", "speedup_vs_neuron_v2",
+        ):
+            assert rec[key] == pytest.approx(host[key], rel=1e-5), (
+                point.label(), key
+            )
+        # Accuracy is joined from the same cache: bit-identical.
+        assert rec["acc_mae"] == host["acc_mae"]
+        assert rec["pwl_mre"] == host["pwl_mre"]
+
+
+def test_sweep_rejects_invalid_points():
+    with pytest.raises(ValueError):
+        grid_sweep([DesignPoint(spad_kib=1)], accuracy_seq=256)
+
+
+# ---------------------------------------------------------------------------
+# Search drivers
+# ---------------------------------------------------------------------------
+
+def test_random_search_deterministic():
+    a = random_search(12, seed=3, accuracy_seq=256)
+    b = random_search(12, seed=3, accuracy_seq=256)
+    c = random_search(12, seed=4, accuracy_seq=256)
+    assert len(a.records) == 12
+    assert [r["label"] for r in a.records] == [r["label"] for r in b.records]
+    assert [r["label"] for r in a.records] != [r["label"] for r in c.records]
+    # No duplicate points, all valid by construction.
+    assert len({r["label"] for r in a.records}) == 12
+
+
+def test_successive_halving_promotes_and_refines():
+    points = grid_space(
+        array_ns=(64, 128), segments=(4, 8), sram_overs=(1, 2)
+    )
+    res = successive_halving(
+        points, seed=0, eta=2, fidelities=(128, 256, 512), mesh=None
+    )
+    # Two halvings: 16 -> 8 -> 4 survivors, evaluated at the top fidelity.
+    assert len(res.records) == len(points) // 4
+    assert all(r["acc_seq"] == 512.0 for r in res.records)
+    again = successive_halving(
+        points, seed=0, eta=2, fidelities=(128, 256, 512), mesh=None
+    )
+    assert [r["label"] for r in res.records] == [r["label"] for r in again.records]
+
+
+# ---------------------------------------------------------------------------
+# Pareto
+# ---------------------------------------------------------------------------
+
+def test_pareto_front_drops_dominated_points():
+    recs = [
+        {"mean_tflops": 10.0, "total_um2": 5.0, "acc_mre": 0.01},
+        {"mean_tflops": 10.0, "total_um2": 6.0, "acc_mre": 0.01},  # dominated
+        {"mean_tflops": 12.0, "total_um2": 9.0, "acc_mre": 0.01},
+        {"mean_tflops": 9.0, "total_um2": 4.0, "acc_mre": 0.02},
+    ]
+    front = pareto_front(recs)
+    assert front == [0, 2, 3]
+    assert dominates(recs[0], recs[1])
+    assert not dominates(recs[1], recs[0])
+
+
+def test_sram_overprovisioning_is_dominated():
+    """Extra SRAM costs area and buys nothing -> never on the frontier."""
+    points = grid_space(
+        array_ns=(128,), schedules=("standard",), segments=(8,), sram_overs=(1, 2)
+    )
+    res = grid_sweep(points, accuracy_seq=256)
+    front = pareto_front(res.records)
+    labels = [res.records[i]["label"] for i in front]
+    assert len(front) == 1 and "S192+64KiB" in labels[0]
+
+
+# ---------------------------------------------------------------------------
+# Report (the acceptance surface)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke_report():
+    return run_tune("smoke", seed=0, paper_check_seq=512)
+
+
+def test_report_paper_checks_pass(smoke_report):
+    assert smoke_report["paper_checks_ok"], smoke_report["paper_checks"]
+    assert smoke_report["paper_point_in_sweep"]
+    assert smoke_report["paper_on_frontier"]
+
+
+def test_report_sim_cross_checks(smoke_report):
+    """>= 3 points validated end to end through the instruction-level sim."""
+    checks = smoke_report["sim_checks"]
+    assert len(checks) >= 3
+    assert all(c["cycles_ok"] for c in checks), checks
+    assert all(c["mae_ok"] for c in checks), checks
+    assert all(c["on_frontier"] for c in checks)
+    # Both schedule variants exercised (6N+10 vs 5N+10 timelines).
+    assert {c["label"].split("/")[1] for c in checks} == {"1dir", "2dir"}
+
+
+def test_report_sharded_over_mesh(smoke_report):
+    assert smoke_report["mesh_devices"] == 8
+    assert sum(smoke_report["per_device_counts"]) == smoke_report["num_points"]
+
+
+def test_report_deterministic_and_serializable(tmp_path, smoke_report):
+    again = run_tune("smoke", seed=0, paper_check_seq=512)
+    strip = lambda r: {k: v for k, v in r.items() if k != "records"}  # noqa: E731
+    assert json.dumps(strip(smoke_report), sort_keys=True) == json.dumps(
+        strip(again), sort_keys=True
+    )
+    md = tmp_path / "report.md"
+    js = tmp_path / "BENCH_tune.json"
+    write_report(smoke_report, md_path=str(md), json_path=str(js))
+    payload = json.loads(js.read_text())
+    assert payload["frontier_size"] == smoke_report["frontier_size"]
+    assert "records" not in payload
+    text = md.read_text()
+    assert paper_point().label() in text
+    assert "Pareto frontier" in text
+
+
+def test_render_markdown_marks_paper_point(smoke_report):
+    md = render_markdown(smoke_report)
+    assert f"| {paper_point().label()} *" in md
+    assert "on the Pareto frontier" in md
+
+
+def test_paper_preset_is_the_paper_special_case():
+    """preset='paper' reduces the sweep to Fig. 11 + Table 2 + Table 3."""
+    rep = run_tune("paper", seed=0, mesh=False, paper_check_seq=512)
+    assert rep["num_points"] == 1
+    assert rep["paper_on_frontier"]
+    assert rep["paper_checks_ok"]
+    assert rep["sim_checks_ok"]
