@@ -1,10 +1,17 @@
-"""Serving throughput: continuous-batching decode tokens/s.
+"""Serving throughput: continuous-batching decode tokens/s + latency tails.
 
 First point on the repo's bench trajectory (ROADMAP "Benchmark
 trajectory"): a CPU-runnable tiny-model measurement of the engine's
 steady-state generate step — full slot pool, executables warm, one batched
 decode per step — written to ``BENCH_serve.json`` so CI archives a
 comparable number per commit.
+
+Since PR 10 the latency distribution comes from the engine's own
+``repro.obs`` registry: TTFT and TPOT percentiles (TTFT — and TPOT's p99 —
+include the jit compile, deliberately: that *is* the first-request
+experience) and mean batch utilization ride along in the JSON;
+``benchmarks/summarize.py`` folds the ``latency.*`` keys into the CI step
+summary.
 """
 
 from __future__ import annotations
@@ -69,6 +76,9 @@ def run(csv_rows: list) -> dict:
         ("serve_decode", us_per_step, f"decode_tok_s={tok_s:.1f};batch={BATCH}")
     )
 
+    ttft = engine.registry.get("serve_ttft_seconds")
+    tpot = engine.registry.get("serve_tpot_seconds")
+    butil = engine.registry.get("serve_batch_utilization")
     result = {
         "benchmark": "serve_decode",
         "decode_tokens_per_s": round(tok_s, 1),
@@ -76,6 +86,14 @@ def run(csv_rows: list) -> dict:
         "batch_size": BATCH,
         "prompt_len": PROMPT_LEN,
         "timed_steps": TIMED_STEPS,
+        "latency": {
+            "ttft_p50_ms": round(ttft.percentile(50) * 1e3, 3),
+            "ttft_p99_ms": round(ttft.percentile(99) * 1e3, 3),
+            "tpot_p50_ms": round(tpot.percentile(50) * 1e3, 3),
+            "tpot_p99_ms": round(tpot.percentile(99) * 1e3, 3),
+            "batch_utilization_mean": round(butil.sum / max(butil.count, 1), 4),
+        },
+        "mfu_decode": engine.registry.get("mfu").labels(phase="decode").value,
         "model": {
             "family": CFG.family,
             "num_layers": CFG.num_layers,

@@ -39,6 +39,7 @@ def summarize(paths: list[str]) -> str:
     if not paths:
         lines.append("_no BENCH_*.json files found_")
         return "\n".join(lines) + "\n"
+    latency_rows = []  # (file, metric, value): surfaced in their own table
     lines += ["| file | metric | value |", "|---|---|---|"]
     for path in sorted(paths):
         with open(path) as f:
@@ -47,7 +48,19 @@ def summarize(paths: list[str]) -> str:
         for key, val in _flatten(data):
             if key.startswith("model."):  # config echo, not a metric
                 continue
+            if key.startswith("latency."):
+                latency_rows.append((name, key.removeprefix("latency."), val))
+                continue
             lines.append(f"| {name} | {key} | {val} |")
+    if latency_rows:
+        lines += [
+            "",
+            "## Latency percentiles (repro.obs)",
+            "",
+            "| file | metric | value |",
+            "|---|---|---|",
+        ]
+        lines += [f"| {n} | {k} | {v} |" for n, k, v in latency_rows]
     return "\n".join(lines) + "\n"
 
 

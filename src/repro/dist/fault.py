@@ -13,6 +13,12 @@ them in; ``tests/test_substrate.py`` pins the semantics):
     latest checkpoint and run; on a crash, restart up to ``max_restarts``
     times — combined with atomic checkpoints this makes mid-training node
     failure a bounded-cost event instead of a lost run.
+
+All three emit liveness counters through ``repro.obs``
+(``watchdog_heartbeats_total`` / ``watchdog_stragglers_total`` /
+``preemptions_total`` / ``restarts_total``) — the saturation signals a
+fleet scheduler watches; pass ``registry=`` to scope them, default is the
+process-global registry.
 """
 
 from __future__ import annotations
@@ -22,6 +28,14 @@ import statistics
 import time
 from collections import deque
 from typing import Any, Callable, Optional, Tuple
+
+from repro.obs import metrics as _obs_metrics
+
+
+def _registry(registry):
+    """Fault-layer metrics default to the process-global registry so a
+    supervisor scraping one endpoint sees every component's health."""
+    return registry if registry is not None else _obs_metrics.default_registry()
 
 
 class StragglerDetected(RuntimeError):
@@ -34,11 +48,19 @@ class StepWatchdog:
         timeout_factor: float = 5.0,
         warmup_steps: int = 5,
         window: int = 50,
+        registry=None,  # repro.obs Registry (default: process-global)
     ):
         self.timeout_factor = timeout_factor
         self.warmup_steps = warmup_steps
         self.durations: deque[float] = deque(maxlen=window)
         self._t0: Optional[float] = None
+        reg = _registry(registry)
+        self._heartbeats = reg.counter(
+            "watchdog_heartbeats_total", "completed steps the watchdog saw"
+        )
+        self._stragglers = reg.counter(
+            "watchdog_stragglers_total", "steps flagged as stragglers"
+        )
 
     def start_step(self) -> None:
         self._t0 = time.monotonic()
@@ -50,6 +72,7 @@ class StepWatchdog:
         dur = time.monotonic() - self._t0
         self._t0 = None
         self.durations.append(dur)
+        self._heartbeats.inc()
         return dur
 
     def median(self) -> Optional[float]:
@@ -61,6 +84,7 @@ class StepWatchdog:
         """Raise StragglerDetected if ``duration`` is anomalous."""
         med = self.median()
         if med is not None and duration > self.timeout_factor * med:
+            self._stragglers.inc()
             raise StragglerDetected(
                 f"step took {duration:.3f}s vs median {med:.3f}s "
                 f"(factor {self.timeout_factor})"
@@ -70,14 +94,19 @@ class StepWatchdog:
 class PreemptionHandler:
     """SIGTERM -> drain flag.  ``install=False`` for tests / nested use."""
 
-    def __init__(self, install: bool = True, signals=(signal.SIGTERM,)):
+    def __init__(self, install: bool = True, signals=(signal.SIGTERM,),
+                 registry=None):
         self.requested = False
+        self._preemptions = _registry(registry).counter(
+            "preemptions_total", "preemption notices received"
+        )
         if install:
             for s in signals:
                 signal.signal(s, self.trigger)
 
     def trigger(self, *_args) -> None:
         self.requested = True
+        self._preemptions.inc()
 
 
 def run_with_restarts(
@@ -86,10 +115,14 @@ def run_with_restarts(
     *,
     steps_per_attempt: int,
     max_restarts: int = 3,
+    registry=None,
 ) -> Tuple[Any, int]:
     """Supervise a training run: rebuild state (resume from the latest
     checkpoint) and run; restart on any crash.  Returns
     ``(final_state, restarts_used)``; re-raises after ``max_restarts``."""
+    restart_counter = _registry(registry).counter(
+        "restarts_total", "supervisor restarts after a crash"
+    )
     restarts = 0
     while True:
         state = make_state()
@@ -97,5 +130,6 @@ def run_with_restarts(
             return run_steps(state, steps_per_attempt), restarts
         except Exception:
             restarts += 1
+            restart_counter.inc()
             if restarts > max_restarts:
                 raise

@@ -1,7 +1,17 @@
-"""Recover dry-run records from a dryrun stdout log (for runs interrupted
-before their JSON dump).  Usage:
+"""Recover structured records from run logs.
 
-  PYTHONPATH=src python -m repro.launch.scrape_log dryrun_log.txt out.json
+Two sources, newest first:
+
+  * **JSONL fast path** — the trainer (``TrainerConfig.metrics_jsonl``,
+    wired to ``launch/train.py --metrics-out``) streams one JSON object
+    per step; any log whose lines parse as JSON objects is consumed
+    verbatim, no regexes.
+  * **Regex fallback** — dryrun stdout logs (for runs interrupted before
+    their JSON dump) are scraped with the original pattern set.
+
+Usage:
+
+  PYTHONPATH=src python -m repro.launch.scrape_log run_log.txt out.json
 """
 
 from __future__ import annotations
@@ -11,7 +21,26 @@ import re
 import sys
 
 
-def scrape(text: str) -> list[dict]:
+def scrape_jsonl(text: str) -> list[dict]:
+    """Collect every line that parses as a JSON object (the trainer's
+    metrics stream; interleaved non-JSON lines — human log lines, tracebacks
+    — are skipped)."""
+    records = []
+    for line in text.splitlines():
+        line = line.strip()
+        if not (line.startswith("{") and line.endswith("}")):
+            continue
+        try:
+            obj = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if isinstance(obj, dict):
+            records.append(obj)
+    return records
+
+
+def scrape_dryrun(text: str) -> list[dict]:
+    """Regex path: reconstruct dryrun records from stdout."""
     records = []
     cur = None
     for line in text.splitlines():
@@ -54,6 +83,13 @@ def scrape(text: str) -> list[dict]:
     if cur:
         records.append(cur)
     return records
+
+
+def scrape(text: str) -> list[dict]:
+    """JSONL fast path when the log carries structured records, else the
+    dryrun regex fallback."""
+    records = scrape_jsonl(text)
+    return records if records else scrape_dryrun(text)
 
 
 def main() -> None:

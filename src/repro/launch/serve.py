@@ -24,11 +24,18 @@ prefill bucketing, slot eviction and back-fill even in a smoke run.
                                  near-free draft / exact target split)
   --check                        verify every greedy output token-for-token
                                  against sequential single-request decode
+  --metrics-out PATH             dump the engine's metrics registry as
+                                 Prometheus text at exit (TTFT/TPOT/queue
+                                 histograms, occupancy + MFU gauges, jit
+                                 compile counters)
+  --trace-out PATH               save a Chrome-trace/Perfetto JSON of the
+                                 run (open at ui.perfetto.dev)
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -36,6 +43,7 @@ import numpy as np
 
 from repro.configs.registry import get_smoke_config
 from repro.models import init_params
+from repro.obs import Tracer, set_tracer, watch_jit_compiles
 from repro.quant.config import QUANT_FLAGS
 from repro.serve import Request, SamplingConfig, ServeEngine, sequential_greedy_decode
 
@@ -66,6 +74,10 @@ def main() -> None:
                     help="int8 policy applied to the draft model only")
     ap.add_argument("--check", action="store_true",
                     help="compare against sequential single-request decode")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write Prometheus text exposition here at exit")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto-loadable Chrome trace here")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch, args.quant)
@@ -104,10 +116,15 @@ def main() -> None:
                 resolve_draft_config(spec, cfg), jax.random.PRNGKey(1)
             )
 
+    tracer = None
+    if args.trace_out:
+        tracer = Tracer(process_name=f"serve {args.arch}")
+        set_tracer(tracer)
+
     engine = ServeEngine(
         cfg, params, batch_size=args.batch, max_len=args.max_len,
         prefill_chunk=args.chunk, sampling=sampling, mesh=mesh,
-        spec=spec, draft_params=draft_params,
+        spec=spec, draft_params=draft_params, tracer=tracer,
     )
 
     rng = np.random.default_rng(0)
@@ -117,8 +134,19 @@ def main() -> None:
         prompts[i] = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
         engine.submit(Request(rid=i, prompt=prompts[i], max_new_tokens=args.max_new))
 
+    # With a metrics sink requested, also count XLA executable builds into
+    # the registry (jax's compile log fires once per build).
+    compile_watch = (
+        watch_jit_compiles(
+            engine.registry.counter(
+                "jit_compiles_total", "XLA executable builds observed"
+            )
+        )
+        if args.metrics_out else contextlib.nullcontext()
+    )
     t0 = time.perf_counter()
-    done = engine.run()
+    with compile_watch:
+        done = engine.run()
     dt = time.perf_counter() - t0
 
     for r in sorted(done, key=lambda r: r.rid):
@@ -135,6 +163,21 @@ def main() -> None:
             f"{engine.stats['verify_steps']} verify steps for {toks} tokens "
             f"({toks / max(engine.stats['verify_steps'], 1):.2f} tok/verify)"
         )
+
+    ttft = engine.registry.get("serve_ttft_seconds")
+    tpot = engine.registry.get("serve_tpot_seconds")
+    print(
+        f"latency: ttft p50 {ttft.percentile(50) * 1e3:.1f} ms "
+        f"p99 {ttft.percentile(99) * 1e3:.1f} ms | "
+        f"tpot p50 {tpot.percentile(50) * 1e3:.1f} ms "
+        f"p99 {tpot.percentile(99) * 1e3:.1f} ms"
+    )
+    if args.metrics_out:
+        engine.registry.dump(args.metrics_out)
+        print(f"metrics -> {args.metrics_out}")
+    if tracer is not None:
+        tracer.save(args.trace_out)
+        print(f"trace ({len(tracer.events)} events) -> {args.trace_out}")
 
     if args.check:
         if not sampling.greedy:

@@ -12,6 +12,11 @@ repro.dist.sharding; ``--mesh DxM`` stands one up from the local devices.
                        is straight-through against fp operands)
   --compress-grads     int8 DP gradient reduction with error feedback
   --mesh DxM           debug mesh (data x model), e.g. --mesh 2x1
+  --metrics-out PATH   Prometheus text dump at exit (loss/gnorm gauges,
+                       step-latency histogram, MFU, watchdog heartbeats);
+                       additionally streams one JSON record per step to
+                       PATH.jsonl (scrape_log's fast path)
+  --trace-out PATH     Chrome-trace/Perfetto JSON of the per-step spans
 """
 
 from __future__ import annotations
@@ -21,6 +26,7 @@ import dataclasses
 
 from repro.configs.base import ShapeConfig
 from repro.configs.registry import get_config, get_smoke_config
+from repro.obs import Tracer, set_tracer
 from repro.quant.config import QUANT_FLAGS
 from repro.train.trainer import Trainer, TrainerConfig
 
@@ -42,6 +48,10 @@ def main() -> None:
     ap.add_argument("--compress-grads", action="store_true",
                     help="int8-compressed DP gradient reduction")
     ap.add_argument("--mesh", default=None, help="debug mesh DxM, e.g. 2x1")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="Prometheus dump at exit + per-step PATH.jsonl stream")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto-loadable Chrome trace here")
     args = ap.parse_args()
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch, args.quant)
@@ -57,6 +67,7 @@ def main() -> None:
         num_microbatches=args.microbatches,
         log_every=max(args.steps // 10, 1),
         compress_grads=args.compress_grads,
+        metrics_jsonl=args.metrics_out + ".jsonl" if args.metrics_out else None,
     )
     mesh = None
     if args.mesh:
@@ -64,10 +75,25 @@ def main() -> None:
 
         data, model = (int(x) for x in args.mesh.split("x"))
         mesh = make_debug_mesh(data, model)
-    trainer = Trainer(cfg, shape, tcfg, token_file=args.token_file, mesh=mesh)
+    tracer = None
+    if args.trace_out:
+        tracer = Tracer(process_name=f"train {args.arch}")
+        set_tracer(tracer)
+    trainer = Trainer(
+        cfg, shape, tcfg, token_file=args.token_file, mesh=mesh, tracer=tracer
+    )
     state = trainer.run()
     print(f"done at step {state['step']}; "
           f"loss {state['losses'][0]:.4f} -> {state['losses'][-1]:.4f}")
+    mfu = trainer.registry.get("mfu")
+    if mfu is not None:
+        print(f"mfu (train, vs FSA array peak): {mfu.labels(phase='train').value:.3e}")
+    if args.metrics_out:
+        trainer.registry.dump(args.metrics_out)
+        print(f"metrics -> {args.metrics_out} (+ {tcfg.metrics_jsonl})")
+    if tracer is not None:
+        tracer.save(args.trace_out)
+        print(f"trace ({len(tracer.events)} events) -> {args.trace_out}")
 
 
 if __name__ == "__main__":

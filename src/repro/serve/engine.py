@@ -26,12 +26,23 @@ verifies all of them in one wide teacher-forced forward against the live
 cache, and rejected suffixes roll back by per-slot length truncation.
 Greedy outputs stay token-identical to vanilla decode — only the step
 count changes.
+
+Telemetry (``repro.obs``): every engine owns a metrics ``Registry`` —
+request-lifecycle histograms (``serve_ttft_seconds``,
+``serve_tpot_seconds``, ``serve_queue_wait_seconds``), slot-occupancy /
+batch-utilization / queue-depth gauges, per-phase jit-executable gauges,
+spec acceptance, and per-phase MFU gauges against the paper's FSA array
+(``repro.obs.mfu``).  The legacy ``stats`` dict is now a property over the
+registry counters.  With a real ``Tracer`` installed (``--trace-out``),
+phases emit live spans and each retired request leaves queued/prefill/
+decode spans on its slot's lane.
 """
 
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from collections import deque
 from typing import Optional
 
@@ -41,6 +52,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import decode_step, init_cache, insert_cache, prefill_step
+from repro.obs import MFUMeter, Registry, get_tracer
 from .serve_step import SamplingConfig, make_decode_step, sample_logits
 
 
@@ -56,6 +68,13 @@ class Request:
     eos_id: int = -1  # -1: never
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # Lifecycle timestamps (engine-clock seconds), filled in by the engine:
+    # enqueue -> prefill start -> first token -> last token.  They back the
+    # TTFT/TPOT/queue-wait histograms and the per-request trace spans.
+    t_submit: Optional[float] = None
+    t_prefill: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_last_token: Optional[float] = None
 
     def __post_init__(self):
         # Callers naturally pass Python lists; everything downstream
@@ -91,6 +110,8 @@ class ServeEngine:
         mesh=None,
         spec=None,  # Optional[repro.spec.SpecConfig]: speculative decoding
         draft_params=None,  # draft model params (self-draft reuses `params`)
+        registry: Optional[Registry] = None,  # repro.obs metrics sink
+        tracer=None,  # repro.obs Tracer (default: ambient, usually Null)
     ):
         assert cfg.family != "encoder", "encoder archs have no decode phase"
         self.cfg, self.params = cfg, params
@@ -113,7 +134,55 @@ class ServeEngine:
         self._step_idx = 0
         self._prefill_idx = 0
         self._base_key = jax.random.PRNGKey(self.sampling.seed)
-        self.stats = {"prefill_calls": 0, "insert_calls": 0, "decode_steps": 0}
+
+        # -- telemetry (repro.obs): engine-scoped registry so concurrent
+        # engines (e.g. spec target + vanilla baseline in one bench) never
+        # share counters; the tracer defaults to the ambient one, which is
+        # the free NullTracer unless a launcher installed a real Tracer.
+        self.registry = registry if registry is not None else Registry()
+        self.tracer = tracer if tracer is not None else get_tracer()
+        self.mfu = MFUMeter(cfg, self.registry)
+        self._stat_keys = ["prefill_calls", "insert_calls", "decode_steps"]
+        self._counters = {
+            k: self.registry.counter(f"serve_{k}_total", h)
+            for k, h in [
+                ("prefill_calls", "prefill jit invocations"),
+                ("insert_calls", "cache-insert jit invocations"),
+                ("decode_steps", "batched generate steps"),
+            ]
+        }
+        self._tokens_total = self.registry.counter(
+            "serve_tokens_total", "tokens emitted across all requests"
+        )
+        self._requests_total = self.registry.counter(
+            "serve_requests_completed_total", "requests retired"
+        )
+        self._h_ttft = self.registry.histogram(
+            "serve_ttft_seconds", "submit -> first token"
+        )
+        self._h_tpot = self.registry.histogram(
+            "serve_tpot_seconds", "per-token latency of batched decode steps"
+        )
+        self._h_queue = self.registry.histogram(
+            "serve_queue_wait_seconds", "submit -> prefill start"
+        )
+        self._h_prefill = self.registry.histogram(
+            "serve_prefill_seconds", "prefill + insert wall time"
+        )
+        self._h_batch_util = self.registry.histogram(
+            "serve_batch_utilization", "live slots / batch per generate step",
+            buckets=tuple(np.round(np.arange(0.05, 1.05, 0.05), 2)),
+        )
+        self._g_occupancy = self.registry.gauge(
+            "serve_slot_occupancy", "fraction of decode slots live"
+        )
+        self._g_queue_depth = self.registry.gauge(
+            "serve_queue_depth", "requests waiting for a slot"
+        )
+        self._g_compiled = self.registry.gauge(
+            "serve_jit_executables", "compiled executables per engine phase",
+            ("phase",),
+        )
 
         # -- speculative decoding (repro.spec): draft worker + verify jit --
         self.spec = spec
@@ -142,9 +211,20 @@ class ServeEngine:
                 prefill_chunk=prefill_chunk,
             )
             self._verify_jit = jax.jit(make_spec_verify(cfg))
-            self.stats.update(
-                verify_steps=0, draft_steps=0,
-                proposed_tokens=0, accepted_tokens=0,
+            spec_keys = [
+                ("verify_steps", "wide verify forwards"),
+                ("draft_steps", "draft decode steps"),
+                ("proposed_tokens", "draft tokens proposed"),
+                ("accepted_tokens", "draft tokens the target accepted"),
+            ]
+            self._stat_keys += [k for k, _ in spec_keys]
+            self._counters.update(
+                {k: self.registry.counter(f"serve_{k}_total", h)
+                 for k, h in spec_keys}
+            )
+            self._g_acceptance = self.registry.gauge(
+                "spec_acceptance_rate",
+                "cumulative fraction of proposed draft tokens accepted",
             )
 
         scfg = self.sampling
@@ -179,8 +259,17 @@ class ServeEngine:
 
     # -- introspection ------------------------------------------------------
 
+    @property
+    def stats(self) -> dict:
+        """Legacy raw-counter view, now backed by the ``repro.obs``
+        registry (``serve_*_total`` counters).  Returns a fresh plain dict
+        each access, so ``dict(engine.stats)`` / delta-subtraction idioms
+        from existing tests and benchmarks keep working."""
+        return {k: int(self._counters[k].value) for k in self._stat_keys}
+
     def compile_counts(self) -> dict:
-        """Executables compiled so far, per phase."""
+        """Executables compiled so far, per phase (also exported as the
+        ``serve_jit_executables`` gauge)."""
         counts = {
             "prefill": self._prefill_jit._cache_size(),
             "insert": self._insert_jit._cache_size(),
@@ -189,12 +278,14 @@ class ServeEngine:
         if self.draft is not None:
             counts["verify"] = self._verify_jit._cache_size()
             counts.update(self.draft.compile_counts())
+        for phase, n in counts.items():
+            self._g_compiled.labels(phase=phase).set(n)
         return counts
 
     def acceptance_rate(self) -> float:
         """Fraction of proposed draft tokens the target accepted."""
-        proposed = self.stats.get("proposed_tokens", 0)
-        return self.stats["accepted_tokens"] / proposed if proposed else 0.0
+        proposed = self._counters["proposed_tokens"].value if self.draft else 0
+        return self._counters["accepted_tokens"].value / proposed if proposed else 0.0
 
     # -- request intake -----------------------------------------------------
 
@@ -204,7 +295,9 @@ class ServeEngine:
                 f"prompt length {len(req.prompt)} exceeds the largest prefill "
                 f"bucket {self.buckets[-1]}"
             )
+        req.t_submit = time.perf_counter()
         self.queue.append(req)
+        self._g_queue_depth.set(len(self.queue))
 
     def _bucket_for(self, plen: int) -> int:
         for b in self.buckets:
@@ -238,24 +331,58 @@ class ServeEngine:
         toks[0, :plen] = req.prompt
         key = jax.random.fold_in(self._base_key, self._prefill_idx)
         self._prefill_idx += 1
-        with self._mesh_ctx():
+        req.t_prefill = t0 = time.perf_counter()
+        with self._mesh_ctx(), self.tracer.span(
+            "prefill", cat="serve", tid=slot,
+            args={"rid": req.rid, "len": plen, "bucket": bucket},
+        ):
             tok0, prefix = self._prefill_jit(
                 self.params, jnp.asarray(toks), jnp.asarray(plen, jnp.int32), key
             )
             self.cache = self._insert_jit(
                 self.cache, prefix, jnp.asarray(slot, jnp.int32)
             )
-        self.stats["prefill_calls"] += 1
-        self.stats["insert_calls"] += 1
+            tok0 = int(tok0)  # blocks: the first token is now on the host
+        # The first token is sampled inside prefill, so TTFT == queue wait
+        # plus the prefill span.
+        req.t_first_token = req.t_last_token = now = time.perf_counter()
+        self._counters["prefill_calls"].inc()
+        self._counters["insert_calls"].inc()
+        self._tokens_total.inc()
+        self._h_prefill.observe(now - t0)
+        self._h_queue.observe(t0 - req.t_submit)
+        self._h_ttft.observe(now - req.t_submit)
+        self.mfu.prefill(plen, now - t0)
+        self._g_queue_depth.set(len(self.queue))
         self._positions[slot] = plen
-        self._next_tok[slot] = int(tok0)
-        return int(tok0)
+        self._next_tok[slot] = tok0
+        return tok0
 
     def _retire(self, slot: int) -> None:
         req = self.slots[slot]
         req.done = True
         self._done.append(req)
         self.slots[slot] = None
+        self._finish(req, slot)
+
+    def _finish(self, req: Request, slot: int) -> None:
+        """Close out a request's telemetry: completion counter plus the
+        retroactive per-request lifecycle spans (queue-wait -> prefill ->
+        decode) on the slot's trace lane."""
+        self._requests_total.inc()
+        tr = self.tracer
+        if req.t_submit is not None and req.t_prefill is not None:
+            tr.complete_abs(
+                "queued", req.t_submit, req.t_prefill, cat="request",
+                tid=slot, args={"rid": req.rid},
+            )
+        if req.t_first_token is not None and req.t_last_token is not None:
+            n = len(req.output)
+            tr.complete_abs(
+                "decode", req.t_first_token, req.t_last_token, cat="request",
+                tid=slot, args={"rid": req.rid, "tokens": n},
+            )
+            tr.instant("retire", tid=slot, args={"rid": req.rid, "tokens": n})
 
     def step(self) -> bool:
         """Back-fill free slots, then advance every live slot one token.
@@ -274,6 +401,7 @@ class ServeEngine:
                 if tok0 == req.eos_id or req.max_new_tokens <= 1:
                     req.done = True
                     self._done.append(req)
+                    self._finish(req, i)
                 else:
                     self.slots[i] = req
                     if self.draft is not None:
@@ -284,8 +412,11 @@ class ServeEngine:
                         )
 
         live = [i for i in range(self.batch) if self.slots[i] is not None]
+        self._g_occupancy.set(len(live) / self.batch)
+        self._g_queue_depth.set(len(self.queue))
         if not live:
             return bool(self.queue)
+        self._h_batch_util.observe(len(live) / self.batch)
 
         if self.draft is not None:
             self._spec_generate(live)
@@ -301,19 +432,30 @@ class ServeEngine:
             jnp.asarray(self._next_tok[:, None]),
             jnp.asarray(self._positions),
         )
-        with self._mesh_ctx():
+        t0 = time.perf_counter()
+        with self._mesh_ctx(), self.tracer.span(
+            "generate", cat="serve", tid=0,
+            args={"live": len(live), "step": self._step_idx},
+        ):
             if self.sampling.greedy:
                 nt, _logits, self.cache = self._decode_jit(*args)
             else:
                 key = jax.random.fold_in(self._base_key, 2**20 + self._step_idx)
                 nt, _logits, self.cache = self._decode_jit(*args, key)
-        self.stats["decode_steps"] += 1
+            nt = np.asarray(nt)[:, 0]  # blocks on the decode result
+        now = time.perf_counter()
+        self._counters["decode_steps"].inc()
+        self._tokens_total.inc(len(live))
+        # One batched step emits one token per live slot, so the step wall
+        # time *is* each slot's per-token latency this round.
+        self._h_tpot.observe(now - t0)
+        self.mfu.decode(self._positions[live], now - t0)
         self._step_idx += 1
-        nt = np.asarray(nt)[:, 0]
 
         self._positions[live] += 1
         for i in live:
             req = self.slots[i]
+            req.t_last_token = now
             tok = int(nt[i])
             req.output.append(tok)
             if (
@@ -334,18 +476,30 @@ class ServeEngine:
         to ``_generate``'s — speculation changes step count, never tokens.
         """
         k = self.spec.lookahead
-        drafts = self.draft.propose(self._next_tok, k)  # [B, K]
+        t0 = time.perf_counter()
+        with self.tracer.span("draft", cat="serve", tid=0, args={"k": k}):
+            drafts = self.draft.propose(self._next_tok, k)  # [B, K]
         tokens = np.concatenate(
             [self._next_tok[:, None], drafts], axis=1
         ).astype(np.int32)
-        with self._mesh_ctx():
+        t1 = time.perf_counter()
+        with self._mesh_ctx(), self.tracer.span(
+            "verify", cat="serve", tid=0, args={"live": len(live), "k": k}
+        ):
             greedy, accepted, self.cache = self._verify_jit(
                 self.params, self.cache,
                 jnp.asarray(tokens), jnp.asarray(self._positions),
             )
-        greedy, accepted = np.asarray(greedy), np.asarray(accepted)
-        self.stats["verify_steps"] += 1
-        self.stats["draft_steps"] += k + 1
+            greedy, accepted = np.asarray(greedy), np.asarray(accepted)
+        now = time.perf_counter()
+        self._counters["verify_steps"].inc()
+        self._counters["draft_steps"].inc(k + 1)
+        self.mfu.verify(self._positions[live], k, now - t1)
+        # Per-token latency of the round: the full draft+verify wall time
+        # amortized over the tokens it emitted (upper bound: early
+        # retirement can drop a few of them).
+        emitted = int(np.sum(accepted[live] + 1))
+        self._h_tpot.observe((now - t0) / max(emitted, 1))
         self._step_idx += 1
 
         # Post-verify lengths (the in-jit rollback already clamped
@@ -355,16 +509,18 @@ class ServeEngine:
 
         for i in live:
             req = self.slots[i]
+            req.t_last_token = now
             pos0 = int(self._positions[i])
             n = int(accepted[i])
-            self.stats["proposed_tokens"] += k
-            self.stats["accepted_tokens"] += n
+            self._counters["proposed_tokens"].inc(k)
+            self._counters["accepted_tokens"].inc(n)
             # Consume the emitted run token by token, applying the same
             # retirement rules (EOS / max_new_tokens / capacity) at the
             # same points vanilla decode would.
             for j in range(n + 1):
                 tok = int(greedy[i, j])
                 req.output.append(tok)
+                self._tokens_total.inc()
                 self._positions[i] = pos0 + j + 1
                 if (
                     tok == req.eos_id
@@ -375,6 +531,7 @@ class ServeEngine:
                     break
             else:
                 self._next_tok[i] = int(greedy[i, n])
+        self._g_acceptance.set(self.acceptance_rate())
         self.draft.rollback(new_lengths)
 
     def run(self, max_steps: int = 100_000) -> list[Request]:
@@ -384,6 +541,7 @@ class ServeEngine:
             steps += 1
             if not self.step():
                 break
+        self.compile_counts()  # refresh the serve_jit_executables gauges
         done, self._done = self._done, []
         return done
 

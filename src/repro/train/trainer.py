@@ -4,12 +4,21 @@ makes the framework runnable unattended.
 
 Single-process on this container; every policy (atomic checkpoints, resume
 from latest, watchdog thresholds, preemption drain) is the multi-host one.
+
+Telemetry (``repro.obs``): each step lands in the trainer's metrics
+registry (``train_steps_total``/``train_tokens_total`` counters,
+``train_step_seconds`` histogram, loss/grad-norm gauges, per-step MFU
+against the paper's FSA array) and, when ``TrainerConfig.metrics_jsonl``
+is set, as one structured JSONL record per step — the stream
+``launch/scrape_log.py`` now parses without regexes.  The human log line
+is kept.  Spans go to the ambient tracer (``--trace-out`` installs one).
 """
 
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import json
 import time
 from typing import Callable, Optional
 
@@ -24,6 +33,7 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.data import DataConfig, make_source
 from repro.dist.fault import PreemptionHandler, StepWatchdog
 from repro.models import init_params, lm_loss
+from repro.obs import MFUMeter, Registry, get_tracer
 from repro.optim import make_optimizer
 from repro.optim.grad_compress import init_residual
 from repro.optim.schedules import cosine_with_warmup
@@ -46,6 +56,9 @@ class TrainerConfig:
     # int8-compressed DP gradient reduction with error feedback
     # (repro.optim.grad_compress); adds a residual pytree to the state.
     compress_grads: bool = False
+    # One JSON object per step appended to this path (None: no stream);
+    # the structured twin of the stdout log line — scrape_log's fast path.
+    metrics_jsonl: Optional[str] = None
 
 
 class Trainer:
@@ -58,14 +71,37 @@ class Trainer:
         token_file: Optional[str] = None,
         hooks: Optional[dict[str, Callable]] = None,
         mesh=None,
+        registry: Optional[Registry] = None,  # repro.obs metrics sink
+        tracer=None,  # repro.obs Tracer (default: ambient, usually Null)
     ):
         self.cfg, self.shape, self.tcfg = cfg, shape, tcfg
         self.data = make_source(cfg, shape, DataConfig(seed=tcfg.seed), token_file)
         self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
-        self.watchdog = StepWatchdog(timeout_factor=tcfg.watchdog_factor)
-        self.preempt = PreemptionHandler(install=False)
+        self.registry = registry if registry is not None else Registry()
+        self.tracer = tracer if tracer is not None else get_tracer()
+        self.watchdog = StepWatchdog(
+            timeout_factor=tcfg.watchdog_factor, registry=self.registry
+        )
+        self.preempt = PreemptionHandler(install=False, registry=self.registry)
         self.hooks = hooks or {}
         self.mesh = mesh
+        self.mfu = MFUMeter(cfg, self.registry)
+        self._steps_total = self.registry.counter(
+            "train_steps_total", "optimizer steps completed"
+        )
+        self._tokens_total = self.registry.counter(
+            "train_tokens_total", "tokens consumed"
+        )
+        self._h_step = self.registry.histogram(
+            "train_step_seconds", "wall time per optimizer step"
+        )
+        self._g_loss = self.registry.gauge("train_loss", "last step loss")
+        self._g_gnorm = self.registry.gauge(
+            "train_grad_norm", "last step gradient norm"
+        )
+        self._g_tok_s = self.registry.gauge(
+            "train_tokens_per_s", "throughput of the last step"
+        )
 
         sched = cosine_with_warmup(tcfg.peak_lr, tcfg.warmup_steps, tcfg.total_steps)
         self.optimizer = make_optimizer(tcfg.optimizer, lr=sched)
@@ -125,6 +161,11 @@ class Trainer:
         )
         mesh_ctx = self.mesh or _NULL_CTX
         losses = []
+        tokens_per_batch = self.shape.global_batch * self.shape.seq_len
+        jsonl = (
+            open(self.tcfg.metrics_jsonl, "a")
+            if self.tcfg.metrics_jsonl else None
+        )
         while state["step"] < self.tcfg.total_steps:
             if self.preempt.requested:
                 self.ckpt.save(state["step"], {k: state[k] for k in ckpt_keys})
@@ -132,7 +173,9 @@ class Trainer:
             step = state["step"]
             batch = {k: jnp.asarray(v) for k, v in self.data.batch(step).items()}
             self.watchdog.start_step()
-            with mesh_ctx:
+            with mesh_ctx, self.tracer.span(
+                "train_step", cat="train", tid=0, args={"step": step}
+            ):
                 if self.tcfg.compress_grads:
                     params, opt, residual, metrics = self.step_fn(
                         state["params"], state["opt"], batch, state["residual"]
@@ -146,19 +189,44 @@ class Trainer:
                         state["params"], state["opt"], batch
                     )
                     new_state = {"params": params, "opt": opt, "step": step + 1}
-            jax.block_until_ready(metrics["loss"])
+                jax.block_until_ready(metrics["loss"])
             dur = self.watchdog.end_step()
             state = new_state
-            losses.append(float(metrics["loss"]))
+            loss = float(metrics["loss"])
+            gnorm = float(metrics["grad_norm"])
+            losses.append(loss)
+            self._steps_total.inc()
+            self._tokens_total.inc(tokens_per_batch)
+            self._h_step.observe(dur)
+            self._g_loss.set(loss)
+            self._g_gnorm.set(gnorm)
+            self._g_tok_s.set(tokens_per_batch / dur)
+            mfu_rec = self.mfu.train_step(
+                self.shape.global_batch, self.shape.seq_len, dur
+            )
+            if jsonl is not None:
+                jsonl.write(json.dumps({
+                    "event": "train_step",
+                    "step": step + 1,
+                    "loss": loss,
+                    "grad_norm": gnorm,
+                    "step_s": dur,
+                    "tokens_per_s": tokens_per_batch / dur,
+                    "mfu": mfu_rec["mfu"],
+                    "model_flops_per_s": mfu_rec["flops_per_s"],
+                }) + "\n")
+                jsonl.flush()
             if "on_step" in self.hooks:
                 self.hooks["on_step"](state, metrics)
             if (step + 1) % self.tcfg.log_every == 0:
                 print(
-                    f"step {step + 1} loss {float(metrics['loss']):.4f} "
-                    f"gnorm {float(metrics['grad_norm']):.3f} {dur * 1e3:.0f} ms"
+                    f"step {step + 1} loss {loss:.4f} "
+                    f"gnorm {gnorm:.3f} {dur * 1e3:.0f} ms"
                 )
             if (step + 1) % self.tcfg.ckpt_every == 0:
                 self.ckpt.save_async(step + 1, {k: state[k] for k in ckpt_keys})
+        if jsonl is not None:
+            jsonl.close()
         self.ckpt.wait()
         state["losses"] = losses
         return state

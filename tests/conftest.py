@@ -10,11 +10,12 @@
    (with plain random sampling instead of real shrinking search).
 3. Provide the ``jit_recompiles`` fixture: an XLA-compilation counter the
    serving tests use to pin "compiles once per prefill bucket, never per
-   prompt length".
+   prompt length".  Since PR 10 it is a thin wrapper over the library
+   counter ``repro.obs.JitCompileWatcher`` (same log-record mechanism,
+   now also wirable into a metrics registry).
 """
 
 import importlib.util
-import logging
 import os
 import sys
 from pathlib import Path
@@ -37,33 +38,11 @@ except ImportError:
     sys.modules["hypothesis.strategies"] = _stub.strategies
 
 
-class _CompileCounter(logging.Handler):
-    """Counts XLA compilations via jax's ``jax_log_compiles`` log records
-    ("Finished XLA compilation of <name> in <t> sec"), which fire exactly
-    once per executable build — cache hits are silent."""
-
-    def __init__(self):
-        super().__init__(level=logging.DEBUG)
-        self.count = 0
-
-    def emit(self, record):
-        if "Finished XLA compilation" in record.getMessage():
-            self.count += 1
-
-    def reset(self):
-        self.count = 0
-
-
 @pytest.fixture
 def jit_recompiles():
-    import jax
+    # Imported here (not at module top) so the XLA_FLAGS env setup above
+    # always runs before anything pulls in jax.
+    from repro.obs import watch_jit_compiles
 
-    handler = _CompileCounter()
-    logger = logging.getLogger("jax")
-    jax.config.update("jax_log_compiles", True)
-    logger.addHandler(handler)
-    try:
+    with watch_jit_compiles() as handler:
         yield handler
-    finally:
-        logger.removeHandler(handler)
-        jax.config.update("jax_log_compiles", False)

@@ -1,0 +1,440 @@
+"""Tests for the ``repro.obs`` telemetry layer (ISSUE 10).
+
+Covers: histogram/percentile math vs numpy, Prometheus/JSON exposition
+golden output, Chrome-trace schema validity, the disabled-mode no-op
+overhead guard, MFU cross-checks against ``core.systolic_model`` at the
+paper point, engine TTFT/TPOT plausibility, the library compile counter
+vs the ``jit_recompiles`` fixture, fault-layer counters, trainer metrics
++ the JSONL stream round-trip through ``launch/scrape_log``.
+"""
+
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    )
+
+import json  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.configs.base import ModelConfig, ShapeConfig  # noqa: E402
+from repro.core import systolic_model  # noqa: E402
+from repro.dist.fault import PreemptionHandler, StepWatchdog  # noqa: E402
+from repro.launch.scrape_log import scrape, scrape_dryrun  # noqa: E402
+from repro.models import init_params  # noqa: E402
+from repro.obs import (  # noqa: E402
+    MFUMeter,
+    PAPER_ARRAY,
+    Registry,
+    Tracer,
+    decode_flops,
+    paper_ideal_flops_per_s,
+    prefill_flops,
+    set_enabled,
+    train_step_flops,
+    watch_jit_compiles,
+)
+from repro.serve.engine import Request, ServeEngine  # noqa: E402
+from repro.train.trainer import Trainer, TrainerConfig  # noqa: E402
+
+TINY = ModelConfig(
+    name="tiny-obs",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=128,
+    mlp_type="swiglu",
+    dtype="float32",
+    remat=False,
+)
+
+
+@pytest.fixture(autouse=True)
+def _metrics_enabled():
+    """Every test starts (and leaves the process) with metrics on."""
+    set_enabled(True)
+    yield
+    set_enabled(True)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_gauge_basics_and_labels():
+    reg = Registry()
+    c = reg.counter("reqs_total", "requests", ("phase",))
+    c.labels(phase="prefill").inc()
+    c.labels(phase="prefill").inc(2)
+    c.labels(phase="decode").inc()
+    assert c.labels(phase="prefill").value == 3
+    assert c.labels(phase="decode").value == 1
+    with pytest.raises(ValueError):
+        c.labels(phase="x").inc(-1)  # counters only go up
+
+    g = reg.gauge("occupancy", "live fraction")
+    g.set(0.75)
+    g.inc(0.25)
+    assert g.value == 1.0
+    # Re-registering the same name returns the same family; kind clashes
+    # are errors.
+    assert reg.counter("reqs_total") is c
+    with pytest.raises(ValueError):
+        reg.gauge("reqs_total")
+
+
+def test_histogram_percentiles_match_numpy():
+    reg = Registry()
+    h = reg.histogram("lat", "latency")
+    rng = np.random.default_rng(0)
+    vals = rng.lognormal(mean=-3.0, sigma=1.0, size=1000)
+    for v in vals:
+        h.observe(v)
+    for q in (50, 90, 99):
+        assert h.percentile(q) == pytest.approx(np.percentile(vals, q), rel=1e-9)
+    assert h.count == 1000
+    assert h.sum == pytest.approx(vals.sum())
+    s = h.summary()
+    assert s["p50"] == pytest.approx(np.percentile(vals, 50))
+
+
+def test_histogram_bucket_counts_cumulative():
+    reg = Registry()
+    h = reg.histogram("d", "", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 0.5, 5.0, 50.0):
+        h.observe(v)
+    rows = h._default().cumulative_buckets()
+    assert [(le, n) for le, n in rows] == [
+        (0.1, 1), (1.0, 3), (10.0, 4), (float("inf"), 5)
+    ]
+
+
+def test_prometheus_exposition_golden():
+    reg = Registry()
+    reg.counter("steps_total", "steps done").inc(3)
+    reg.gauge("loss", "last loss").set(2.5)
+    h = reg.histogram("lat_seconds", "latency", ("phase",), buckets=(0.1, 1.0))
+    h.labels(phase="decode").observe(0.05)
+    h.labels(phase="decode").observe(0.5)
+    expected = "\n".join([
+        "# HELP lat_seconds latency",
+        "# TYPE lat_seconds histogram",
+        'lat_seconds_bucket{phase="decode",le="0.1"} 1',
+        'lat_seconds_bucket{phase="decode",le="1"} 2',
+        'lat_seconds_bucket{phase="decode",le="+Inf"} 2',
+        'lat_seconds_sum{phase="decode"} 0.55',
+        'lat_seconds_count{phase="decode"} 2',
+        "# HELP loss last loss",
+        "# TYPE loss gauge",
+        "loss 2.5",
+        "# HELP steps_total steps done",
+        "# TYPE steps_total counter",
+        "steps_total 3",
+    ]) + "\n"
+    assert reg.to_prometheus() == expected
+
+
+def test_json_exposition_round_trips_snapshot():
+    reg = Registry()
+    reg.counter("c", "", ("k",)).labels(k="a").inc(2)
+    reg.histogram("h", "").observe(0.2)
+    snap = json.loads(reg.to_json())
+    assert snap["counters"]["c"] == {'{k="a"}': 2.0}
+    assert snap["histograms"]["h"][""]["count"] == 1
+    assert snap == json.loads(json.dumps(reg.snapshot(), sort_keys=True))
+
+
+def test_disabled_mode_is_noop_and_near_free():
+    reg = Registry()
+    c = reg.counter("c", "")
+    h = reg.histogram("h", "")
+    set_enabled(False)
+    c.inc()
+    h.observe(1.0)
+    assert c.value == 0 and h.count == 0  # true no-op
+
+    n = 100_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        c.inc()
+        h.observe(1.0)
+    disabled = time.perf_counter() - t0
+    # Guarded-early-return cost: generous CI bound, ~50x slack over the
+    # observed per-call time.
+    assert disabled / (2 * n) < 5e-6, f"disabled path too slow: {disabled:.3f}s"
+    set_enabled(True)
+    c.inc()
+    assert c.value == 1
+
+
+# ---------------------------------------------------------------------------
+# tracing
+# ---------------------------------------------------------------------------
+
+
+def test_chrome_trace_schema_valid(tmp_path):
+    tr = Tracer(process_name="test")
+    with tr.span("outer", cat="t", tid=1, args={"k": 1}):
+        with tr.span("inner", cat="t", tid=1):
+            pass
+    tr.instant("marker", tid=1, args={"rid": 7})
+    tr.complete("retro", 0.001, 0.002, tid=2)
+    tr.thread_name(1, "slot 1")
+    path = tr.save(str(tmp_path / "trace.json"))
+
+    with open(path) as f:
+        doc = json.load(f)  # loadable JSON — what Perfetto requires
+    evs = doc["traceEvents"]
+    assert isinstance(evs, list) and len(evs) >= 5
+    for ev in evs:
+        assert {"ph", "name", "pid", "tid"} <= set(ev)
+    spans = [e for e in evs if e["ph"] == "X"]
+    assert len(spans) == 3
+    for s in spans:
+        assert s["dur"] >= 0 and s["ts"] >= 0
+    inner = next(e for e in spans if e["name"] == "inner")
+    outer = next(e for e in spans if e["name"] == "outer")
+    # Nesting: inner lies within outer on the same lane.
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-3
+    (instant,) = [e for e in evs if e["ph"] == "i"]
+    assert instant["args"]["rid"] == 7
+
+
+# ---------------------------------------------------------------------------
+# MFU vs systolic_model at the paper point
+# ---------------------------------------------------------------------------
+
+
+def test_paper_ideal_matches_systolic_model():
+    # peak: 2 * 128^2 MACs/cycle at 1.5 GHz
+    assert PAPER_ARRAY.peak_flops_per_s == pytest.approx(49.152e12)
+    for seq in systolic_model.PAPER_SEQLENS:
+        util = systolic_model.fsa_utilization(seq, 128)
+        assert paper_ideal_flops_per_s(seq) == pytest.approx(
+            util * PAPER_ARRAY.peak_flops_per_s
+        )
+
+
+def test_mfu_meter_achieving_ideal_reads_one():
+    """If a phase achieves exactly the paper-ideal FLOPs/s, the
+    achieved/ideal gauge must read 1 (and mfu == Fig. 11 utilization)."""
+    cfg = ModelConfig(
+        name="hd128", family="dense", num_layers=1, d_model=128,
+        num_heads=1, num_kv_heads=1, head_dim=128, d_ff=256,
+        vocab_size=256, dtype="float32", remat=False,
+    )
+    reg = Registry()
+    meter = MFUMeter(cfg, reg)
+    seq = 4096
+    flops = 1e12
+    seconds = flops / paper_ideal_flops_per_s(seq)
+    rec = meter.record("prefill", flops, seconds, seq_len=seq)
+    assert rec["mfu_vs_paper_ideal"] == pytest.approx(1.0)
+    assert rec["mfu"] == pytest.approx(systolic_model.fsa_utilization(seq, 128))
+    assert reg.get("mfu").labels(phase="prefill").value == pytest.approx(rec["mfu"])
+
+
+def test_flops_closed_forms_scale_sanely():
+    # Param term dominates at tiny context; attention term grows with ctx.
+    p = TINY.active_param_count()
+    assert prefill_flops(TINY, 8) > 2.0 * p * 8
+    assert decode_flops(TINY, [16, 16]) > decode_flops(TINY, [4, 4])
+    # Train: 3x the forward cost on params (6 vs 2 FLOPs/param/token).
+    assert train_step_flops(TINY, 2, 32) > 3 * prefill_flops(TINY, 32)
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return init_params(TINY, jax.random.PRNGKey(0))
+
+
+def _run_wave(params, n_requests=5, max_new=4, tracer=None):
+    eng = ServeEngine(
+        TINY, params, batch_size=2, max_len=32, prefill_buckets=(16,),
+        tracer=tracer,
+    )
+    rng = np.random.default_rng(0)
+    for i in range(n_requests):
+        eng.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, TINY.vocab_size, size=6 + i).astype(np.int32),
+            max_new_tokens=max_new,
+        ))
+    done = eng.run()
+    assert len(done) == n_requests
+    return eng, done
+
+
+def test_engine_ttft_tpot_plausible(tiny_params):
+    eng, done = _run_wave(tiny_params)
+    ttft = eng.registry.get("serve_ttft_seconds")
+    tpot = eng.registry.get("serve_tpot_seconds")
+    queue = eng.registry.get("serve_queue_wait_seconds")
+    # One TTFT + one queue-wait observation per request.
+    assert ttft.count == len(done)
+    assert queue.count == len(done)
+    # One TPOT observation per batched decode step.
+    assert tpot.count == eng.stats["decode_steps"]
+    # Plausibility: positive, ordered, sub-minute on a tiny model.
+    assert 0 < tpot.percentile(50) <= tpot.percentile(99) < 60
+    assert 0 < ttft.percentile(50) <= ttft.percentile(99) < 60
+    # Queue wait <= TTFT (TTFT includes it) for the median request.
+    assert queue.percentile(50) <= ttft.percentile(50)
+    # Tokens: every request emitted max_new tokens.
+    assert eng.registry.get("serve_tokens_total").value == sum(
+        len(r.output) for r in done
+    )
+    assert eng.registry.get("serve_requests_completed_total").value == len(done)
+    # MFU gauges populated for both phases.
+    for phase in ("prefill", "decode"):
+        assert eng.registry.get("mfu").labels(phase=phase).value > 0
+    # Occupancy/batch-utilization within [0, 1].
+    assert 0 <= eng.registry.get("serve_slot_occupancy").value <= 1
+    butil = eng.registry.get("serve_batch_utilization")
+    assert 0 < butil.sum / butil.count <= 1
+
+
+def test_engine_stats_property_backwards_compatible(tiny_params):
+    eng, done = _run_wave(tiny_params, n_requests=3)
+    stats = eng.stats
+    assert isinstance(stats, dict)
+    assert stats["prefill_calls"] == 3
+    assert stats["insert_calls"] == 3
+    assert stats["decode_steps"] > 0
+    # Snapshot semantics: mutating the returned dict is harmless.
+    before = dict(eng.stats)
+    stats["prefill_calls"] = 999
+    assert eng.stats == before
+
+
+def test_engine_prometheus_dump_has_required_series(tiny_params):
+    eng, _ = _run_wave(tiny_params, n_requests=3)
+    eng.compile_counts()
+    prom = eng.registry.to_prometheus()
+    for needle in (
+        "serve_ttft_seconds_bucket",
+        "serve_tpot_seconds_bucket",
+        "serve_queue_wait_seconds_bucket",
+        "serve_slot_occupancy",
+        'mfu{phase="decode"}',
+        'serve_jit_executables{phase="generate"}',
+    ):
+        assert needle in prom, f"missing {needle}"
+
+
+def test_engine_trace_lifecycle_spans(tiny_params, tmp_path):
+    tr = Tracer()
+    eng, done = _run_wave(tiny_params, n_requests=3, tracer=tr)
+    doc = json.load(open(tr.save(str(tmp_path / "t.json"))))
+    names = [e.get("name") for e in doc["traceEvents"]]
+    for phase in ("prefill", "generate", "queued", "decode", "retire"):
+        assert phase in names, f"no {phase} events in trace"
+    # One retroactive queued+decode span pair per retired request.
+    assert names.count("queued") == len(done)
+    assert names.count("decode") == len(done)
+
+
+def test_compile_counter_matches_fixture(tiny_params, jit_recompiles):
+    """The library watcher (wired into a registry counter) and the test
+    fixture count the same log records — their totals must agree."""
+    reg = Registry()
+    counter = reg.counter("jit_compiles_total", "")
+    with watch_jit_compiles(counter) as lib_watcher:
+        _run_wave(tiny_params, n_requests=2)
+    assert counter.value == lib_watcher.count == jit_recompiles.count
+    assert counter.value > 0  # the wave does compile something
+
+
+def test_engine_token_equivalence_with_tracer_enabled(tiny_params):
+    """Instrumentation must not perturb outputs: the same wave with and
+    without a live tracer yields identical tokens."""
+    _, plain = _run_wave(tiny_params, n_requests=4)
+    _, traced = _run_wave(tiny_params, n_requests=4, tracer=Tracer())
+    for a, b in zip(
+        sorted(plain, key=lambda r: r.rid), sorted(traced, key=lambda r: r.rid)
+    ):
+        assert a.output == b.output
+
+
+# ---------------------------------------------------------------------------
+# fault-layer + trainer metrics, JSONL round trip
+# ---------------------------------------------------------------------------
+
+
+def test_fault_counters():
+    reg = Registry()
+    wd = StepWatchdog(timeout_factor=2.0, warmup_steps=1, registry=reg)
+    for _ in range(3):
+        wd.start_step()
+        wd.end_step()
+    assert reg.get("watchdog_heartbeats_total").value == 3
+    with pytest.raises(Exception):
+        wd.check(1e9)
+    assert reg.get("watchdog_stragglers_total").value == 1
+
+    ph = PreemptionHandler(install=False, registry=reg)
+    ph.trigger()
+    assert ph.requested
+    assert reg.get("preemptions_total").value == 1
+
+
+def test_trainer_metrics_and_jsonl_roundtrip(tmp_path):
+    jsonl = tmp_path / "train.metrics.jsonl"
+    tcfg = TrainerConfig(
+        total_steps=4, ckpt_every=100, ckpt_dir=str(tmp_path / "ckpt"),
+        log_every=100, metrics_jsonl=str(jsonl),
+    )
+    t = Trainer(TINY, ShapeConfig("t", 32, 4, "train"), tcfg)
+    state = t.run()
+    assert state["step"] == 4
+
+    # Registry: counters/gauges/histograms landed.
+    reg = t.registry
+    assert reg.get("train_steps_total").value == 4
+    assert reg.get("train_tokens_total").value == 4 * 32 * 4
+    assert reg.get("train_step_seconds").count == 4
+    assert np.isfinite(reg.get("train_loss").value)
+    assert reg.get("watchdog_heartbeats_total").value == 4
+    assert reg.get("mfu").labels(phase="train").value > 0
+
+    # JSONL stream: one record per step; scrape()'s fast path returns them.
+    text = jsonl.read_text()
+    records = scrape(text)
+    assert len(records) == 4
+    assert [r["step"] for r in records] == [1, 2, 3, 4]
+    assert records[-1]["loss"] == pytest.approx(state["losses"][-1])
+    for r in records:
+        assert r["event"] == "train_step"
+        assert r["mfu"] > 0 and r["step_s"] > 0
+
+    # Interleaved human log lines don't confuse the fast path.
+    noisy = "step 1 loss 5.0 gnorm 1.0 3 ms\n" + text + "not json {\n"
+    assert scrape(noisy) == records
+
+
+def test_scrape_regex_fallback_still_works():
+    log = (
+        "== yi-9b x train_4k on 8x4 (32 chips) ==\n"
+        "lower 1.5s compile 12.0s\n"
+        "per-device bytes: 3.25 GiB\n"
+    )
+    (rec,) = scrape(log)
+    assert rec["arch"] == "yi-9b" and rec["chips"] == 32
+    assert rec["compile_s"] == 12.0
+    assert scrape_dryrun(log) == [rec]
